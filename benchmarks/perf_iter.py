@@ -1,0 +1,88 @@
+"""Perf-iteration driver for the §Perf hillclimb.
+
+Re-lowers one (arch × shape × mesh) cell with overrides (microbatches,
+fsdp flags, remat, sharding variants), prints the roofline terms next to
+the baseline record, and emits a log line for EXPERIMENTS.md:
+
+    PYTHONPATH=src python -m benchmarks.perf_iter --arch llama3-405b \
+        --shape train_4k --set microbatches=32 --baseline dryrun_records.json
+
+Must run in a fresh process per invocation (512-device XLA flag).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import json
+
+from repro.launch import dryrun
+from repro.launch import presets
+
+
+def parse_override(kv: str):
+    k, v = kv.split("=", 1)
+    try:
+        v = int(v)
+    except ValueError:
+        if v in ("true", "false"):
+            v = v == "true"
+        elif v in ("bf16", "f32"):
+            import jax.numpy as jnp
+            v = jnp.bfloat16 if v == "bf16" else jnp.float32
+    return k, v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="TrainSettings override, e.g. microbatches=32")
+    ap.add_argument("--cfg-set", action="append", default=[],
+                    help="ModelConfig override, e.g. remat=false")
+    ap.add_argument("--baseline", default="dryrun_records.json")
+    args = ap.parse_args()
+
+    # patch the preset for this run
+    st = presets.settings_for(args.arch)
+    if args.set:
+        st = dataclasses.replace(st, **dict(map(parse_override, args.set)))
+        presets.PRESETS[args.arch] = st
+    if args.cfg_set:
+        from repro import configs as C
+        overrides = dict(map(parse_override, args.cfg_set))
+        orig_get = C.get_config
+
+        def patched(arch):
+            cfg = orig_get(arch)
+            if arch == args.arch:
+                cfg = dataclasses.replace(cfg, **overrides)
+            return cfg
+        C.get_config = patched
+        dryrun.configs.get_config = patched
+
+    rec = dryrun.run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                          verbose=False)
+    import sys
+    sys.path.insert(0, os.path.dirname(__file__))
+    from roofline import roofline_row
+
+    row = roofline_row(rec) if rec["status"] == "OK" else None
+    base_row = None
+    if os.path.exists(args.baseline):
+        with open(args.baseline) as f:
+            for r in json.load(f):
+                if (r["arch"], r["shape"], r["mesh"]) == (
+                        rec["arch"], rec["shape"], rec["mesh"]):
+                    base_row = roofline_row(r) if r["status"] == "OK" else None
+    print(json.dumps({"overrides": args.set + args.cfg_set,
+                      "status": rec["status"],
+                      "error": rec.get("error"),
+                      "baseline": base_row, "variant": row},
+                     indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

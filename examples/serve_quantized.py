@@ -1,0 +1,16 @@
+"""Serve a W4A16-quantized model with batched requests (paper's deployment).
+
+Loads a reduced h2o-danube (SWA) model, quantizes every linear to INT4,
+prefills a batch of prompts and decodes greedily — the K≫N small-M GEMM
+regime where the paper's Split-K strategy applies.
+
+    PYTHONPATH=src python examples/serve_quantized.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main([
+        "--arch", "h2o-danube-1.8b", "--reduced",
+        "--batch", "4", "--prompt-len", "32", "--gen", "12",
+        "--strategy", "fused",
+    ])

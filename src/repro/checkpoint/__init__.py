@@ -1,0 +1,3 @@
+from repro.checkpoint.store import (  # noqa: F401
+    latest_step, restore_checkpoint, save_checkpoint,
+)

@@ -1,0 +1,115 @@
+"""Architecture registry + ShapeDtypeStruct input specs for every cell.
+
+``get_config(arch)`` / ``get_reduced(arch)`` resolve ``--arch`` ids;
+``input_specs(cfg, shape)`` builds the allocation-free stand-ins the
+multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES, ShapeSpec, cache_len_for, skip_reason
+from repro.models.config import ModelConfig
+
+ARCHS = (
+    "granite-20b",
+    "h2o-danube-1.8b",
+    "starcoder2-7b",
+    "llama3-405b",
+    "internvl2-1b",
+    "whisper-small",
+    "rwkv6-7b",
+    "mixtral-8x7b",
+    "olmoe-1b-7b",
+    "hymba-1.5b",
+)
+
+# the paper's own benchmark GEMM shapes (Figs. 2–3): (N, K) weight dims drawn
+# from OpenPangu / DeepSeek-R1 / GLM-4.5 / LLaMA-3.2 projection layers
+PAPER_GEMM_SHAPES = [
+    (2048, 16384), (4096, 8192), (1024, 8192), (7168, 2048),
+    (2048, 7168), (4096, 4096), (8192, 4096), (5120, 13824),
+]
+PAPER_BATCH_SIZES = [1, 4, 16, 64, 256]
+
+
+def _module(arch: str):
+    return importlib.import_module(
+        "repro.configs." + arch.replace("-", "_").replace(".", "_"))
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    return _module(arch).REDUCED
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCHS}
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins — no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Abstract inputs for the (arch × shape) cell.
+
+    train    → kwargs for train_step:  {"batch": {tokens, labels, [embeds]}}
+    prefill  → kwargs for prefill_step: {"tokens", [embeds]}
+    decode   → kwargs for serve_step:  {"state", "tokens", "pos"}
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+
+    def text_len():
+        return S - cfg.vision_prefix if cfg.vision_prefix else S
+
+    if shape.kind == "train":
+        batch = {
+            "tokens": sds((B, text_len()), i32),
+            "labels": sds((B, text_len()), i32),
+        }
+        if cfg.vision_prefix:
+            batch["vision_embeds"] = sds(
+                (B, cfg.vision_prefix, cfg.d_model), cfg.dtype)
+        if cfg.family == "encdec":
+            batch["audio_embeds"] = sds(
+                (B, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+        return {"batch": batch}
+
+    if shape.kind == "prefill":
+        out = {"tokens": sds((B, text_len()), i32)}
+        if cfg.vision_prefix:
+            out["prefix_embeds"] = sds(
+                (B, cfg.vision_prefix, cfg.d_model), cfg.dtype)
+        if cfg.family == "encdec":
+            out["audio_embeds"] = sds(
+                (B, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+        return out
+
+    # decode: one new token against a seq_len-deep cache
+    from repro.models import transformer as T
+
+    cache_len = cache_len_for(cfg, shape)
+    state = jax.eval_shape(
+        lambda: T.init_decode_state(cfg, B, cache_len))
+    return {
+        "state": state,
+        "tokens": sds((B,), i32),
+        "pos": sds((B,), i32),
+    }
+
+
+__all__ = [
+    "ARCHS", "SHAPES", "ShapeSpec", "PAPER_GEMM_SHAPES", "PAPER_BATCH_SIZES",
+    "get_config", "get_reduced", "all_configs", "input_specs",
+    "skip_reason", "cache_len_for",
+]

@@ -1,0 +1,17 @@
+"""Architecture config — see module docstring lines below."""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+# granite-20b — dense code LLM, llama-arch, extreme GQA (kv=1) [arXiv:2405.04324; hf]
+CONFIG = ModelConfig(
+    name="granite-20b", family="dense",
+    num_layers=52, d_model=6144, num_heads=48, num_kv_heads=1,
+    d_ff=24576, vocab_size=49152, head_dim=128, rope_theta=10_000.0,
+)
+REDUCED = dataclasses.replace(
+    CONFIG, num_layers=2, d_model=128, num_heads=4, num_kv_heads=1,
+    head_dim=32, d_ff=256, vocab_size=512, dtype=jnp.float32, remat=False)

@@ -1,0 +1,21 @@
+"""Architecture config — see module docstring lines below."""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+# hymba-1.5b — hybrid: parallel attention + Mamba(SSM) heads in every layer,
+# ssm_state=16, SWA on the attention half [arXiv:2411.13676; hf].
+# O(window)+O(1) decode state → runs long_500k.
+CONFIG = ModelConfig(
+    name="hymba-1.5b", family="hybrid",
+    num_layers=32, d_model=1600, num_heads=25, num_kv_heads=5,
+    d_ff=5504, vocab_size=32001, head_dim=64, ssm_state=16, ssm_expand=2,
+    sliding_window=1024, rope_theta=10_000.0,
+)
+REDUCED = dataclasses.replace(
+    CONFIG, num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+    head_dim=32, d_ff=256, vocab_size=512, ssm_state=8, ssm_expand=2,
+    sliding_window=16, dtype=jnp.float32, remat=False)

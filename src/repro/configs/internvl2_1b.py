@@ -1,0 +1,20 @@
+"""Architecture config — see module docstring lines below."""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+# internvl2-1b — VLM: InternViT frontend (STUB — input_specs supplies
+# precomputed patch embeddings) + InternLM2 backbone [arXiv:2404.16821; hf]
+CONFIG = ModelConfig(
+    name="internvl2-1b", family="dense",
+    num_layers=24, d_model=896, num_heads=14, num_kv_heads=2,
+    d_ff=4864, vocab_size=151655, head_dim=64, vision_prefix=256,
+    rope_theta=1_000_000.0,
+)
+REDUCED = dataclasses.replace(
+    CONFIG, num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+    head_dim=32, d_ff=256, vocab_size=512, vision_prefix=8,
+    dtype=jnp.float32, remat=False)

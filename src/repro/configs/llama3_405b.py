@@ -1,0 +1,19 @@
+"""Architecture config — see module docstring lines below."""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+# llama3-405b — dense frontier-scale, GQA kv=8, 128k vocab
+# [arXiv:2407.21783; unverified]. The FSDP + microbatching stress test.
+CONFIG = ModelConfig(
+    name="llama3-405b", family="dense",
+    num_layers=126, d_model=16384, num_heads=128, num_kv_heads=8,
+    d_ff=53248, vocab_size=128256, head_dim=128, rope_theta=500_000.0,
+    bf16_partials=True,   # §Perf iter L2: TP activation collectives in bf16
+)
+REDUCED = dataclasses.replace(
+    CONFIG, num_layers=2, d_model=256, num_heads=8, num_kv_heads=2,
+    head_dim=32, d_ff=512, vocab_size=512, dtype=jnp.float32, remat=False)

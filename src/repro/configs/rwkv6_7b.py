@@ -1,0 +1,19 @@
+"""Architecture config — see module docstring lines below."""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+# rwkv6-7b "Finch" — attention-free RWKV-6 with data-dependent decay
+# [arXiv:2404.05892; hf]. Constant-size recurrent state → runs long_500k.
+# num_heads = d_model / 64 (head_size 64).
+CONFIG = ModelConfig(
+    name="rwkv6-7b", family="rwkv",
+    num_layers=32, d_model=4096, num_heads=64, num_kv_heads=64,
+    d_ff=14336, vocab_size=65536, head_dim=64,
+)
+REDUCED = dataclasses.replace(
+    CONFIG, num_layers=2, d_model=128, num_heads=2, num_kv_heads=2,
+    head_dim=64, d_ff=256, vocab_size=512, dtype=jnp.float32, remat=False)

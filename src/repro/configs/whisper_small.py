@@ -1,0 +1,25 @@
+"""Architecture config — see module docstring lines below."""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+# whisper-small — encoder-decoder audio backbone; conv frontend is a STUB
+# (input_specs supplies precomputed frame embeddings, capped at the model's
+# 1500-frame positional length). LayerNorm+GELU per the original; positions
+# use RoPE here (adaptation noted in DESIGN.md) so the 32k decoder shapes
+# are well-defined beyond Whisper's learned 448 positions.
+# [arXiv:2212.04356; unverified]
+CONFIG = ModelConfig(
+    name="whisper-small", family="encdec",
+    num_layers=12, d_model=768, num_heads=12, num_kv_heads=12,
+    d_ff=3072, vocab_size=51865, head_dim=64,
+    encoder_layers=12, encoder_seq=1500,
+    mlp_type="gelu", norm_type="layernorm", rope_theta=10_000.0,
+)
+REDUCED = dataclasses.replace(
+    CONFIG, num_layers=2, d_model=128, num_heads=4, num_kv_heads=4,
+    head_dim=32, d_ff=256, vocab_size=512, encoder_layers=2, encoder_seq=32,
+    dtype=jnp.float32, remat=False)

@@ -1,0 +1,184 @@
+"""Analytic performance models.
+
+Two machines are modeled:
+
+1. **Ascend 910** (the paper's hardware) — a mechanistic three-phase model of
+   Alg. 1 used to *reproduce the paper's measured trends* (Fig. 2: Split-K vs
+   data-parallel; Fig. 3: W4A16 ≤1.48× over FP16). The decoupled-architecture
+   constraint is explicit: dequantized weights round-trip through the
+   GM/L2 path between vector and cube cores.
+
+2. **TPU v5e** (our target) — the roofline constants used by
+   benchmarks/roofline.py for the dry-run analysis, plus a fused-kernel
+   model showing the round-trip term vanishing (the paper's Future-Work
+   "direct data path", which the TPU core has).
+
+The Ascend model is *calibrated, not measured*: compute/HBM constants are
+public datasheet numbers; (bw_l2, bw_sat_cores, launch_s) are fit by grid
+search so the model reproduces the paper's headline numbers — Split-K
+speedup range [1.00, 1.78] vs the paper's [1.01, 1.74] and a W4A16-vs-FP16
+cap of 1.47x vs the paper's 1.48x (see tests/test_costmodel.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class AscendSpec:
+    cube_flops: float = 256e12        # FP16 MACs/s aggregate (910)
+    bw_gm: float = 1.1e12             # HBM bytes/s
+    bw_l2: float = 2.2e12             # on-chip L2 path (vector↔cube round-trip)
+    num_cores: int = 32               # AI cores (1 cube + 2 vector each)
+    bw_sat_cores: int = 10           # cores needed to saturate GM bandwidth —
+                                      # an underfilled grid can't pull peak BW;
+                                      # this is WHY Split-K wins at K≫N/small M
+    launch_s: float = 3e-6            # kernel-launch + sync overhead
+    block_m: int = 128
+    block_n: int = 256
+    block_k: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUv5eSpec:
+    flops: float = 197e12             # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9             # bytes/s per chip
+    ici_bw: float = 50e9              # bytes/s per link
+    vmem_bytes: int = 128 * 2 ** 20
+
+
+ASCEND = AscendSpec()
+TPU_V5E = TPUv5eSpec()
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ---------------------------------------------------------------------------
+# Ascend 910 model (paper Alg. 1)
+# ---------------------------------------------------------------------------
+
+def _wave_efficiency(tiles: int, cores: int) -> float:
+    """Cube-core utilization with wave quantization: the last wave may be
+    partially filled — the effect behind the paper's Fig. 2."""
+    if tiles >= cores:
+        waves = _ceil_div(tiles, cores)
+        return tiles / (waves * cores)
+    return tiles / cores
+
+
+def gemm_time_ascend(M: int, N: int, K: int, *, split_k: int = 1,
+                     weight_bytes_per_elt: float = 2.0,
+                     weight_bw: Optional[float] = None,
+                     spec: AscendSpec = ASCEND) -> float:
+    """Time of one tiled GEMM phase (data-parallel if split_k == 1).
+
+    weight_bytes_per_elt / weight_bw let the caller model where B comes
+    from: GM fp16 (2.0, bw_gm), GM int4 (0.5, bw_gm) or the L2-resident
+    dequant workspace (2.0, bw_l2).
+    """
+    weight_bw = weight_bw or spec.bw_gm
+    m, n = spec.block_m, spec.block_n
+    tiles = _ceil_div(M, m) * _ceil_div(N, n) * split_k
+    eff = _wave_efficiency(tiles, spec.num_cores)
+    t_compute = (2 * M * N * K) / (spec.cube_flops * eff)
+    # memory bandwidth scales with active cores until saturation — the
+    # decoupled-architecture effect behind the paper's Fig. 2
+    bw_frac = min(1.0, min(tiles, spec.num_cores) / spec.bw_sat_cores)
+    # A re-read per N-tile wave; B re-read per M-tile (M small → once)
+    a_traffic = 2 * M * K * max(1, _ceil_div(N, n * spec.num_cores))
+    b_traffic = weight_bytes_per_elt * K * N * _ceil_div(M, m)
+    c_traffic = (4 if split_k > 1 else 2) * M * N * split_k
+    t_mem = (a_traffic / spec.bw_gm + b_traffic / weight_bw
+             + c_traffic / spec.bw_gm) / bw_frac
+    return max(t_compute, t_mem) + spec.launch_s
+
+
+def w4a16_time_ascend(M: int, N: int, K: int, *, split_k: int = 1,
+                      spec: AscendSpec = ASCEND) -> float:
+    """Full three-phase W4A16 pipeline (paper Alg. 1).
+
+    Phase 1 (AIV): read INT4 from GM, write FP16 workspace (L2 path —
+    this is THE decoupled-architecture round-trip the paper measures).
+    Phase 2 (AIC): Split-K GEMM, weights from the L2-resident workspace.
+    Phase 3 (AIV): reduce S partials + downcast.
+    """
+    t1 = (0.5 * K * N) / spec.bw_gm + (2 * K * N) / spec.bw_l2 + spec.launch_s
+    t2 = gemm_time_ascend(M, N, K, split_k=split_k,
+                          weight_bytes_per_elt=2.0, weight_bw=spec.bw_l2,
+                          spec=spec)
+    t3 = 0.0
+    if split_k > 1:
+        t3 = (4 * M * N * split_k + 2 * M * N) / spec.bw_gm + spec.launch_s
+    return t1 + t2 + t3
+
+
+def fp16_time_ascend(M: int, N: int, K: int,
+                     spec: AscendSpec = ASCEND) -> float:
+    """Native FP16×FP16 (the paper's PyTorch baseline): data-parallel,
+    FP16 weights straight from GM."""
+    return gemm_time_ascend(M, N, K, split_k=1,
+                            weight_bytes_per_elt=2.0, weight_bw=spec.bw_gm,
+                            spec=spec)
+
+
+def best_split_k_ascend(M: int, N: int, K: int,
+                        spec: AscendSpec = ASCEND) -> int:
+    best, best_t = 1, float("inf")
+    for s in (1, 2, 4, 8, 16):
+        if K % s:
+            continue
+        t = w4a16_time_ascend(M, N, K, split_k=s, spec=spec)
+        if t < best_t:
+            best, best_t = s, t
+    return best
+
+
+def splitk_speedup_ascend(M: int, N: int, K: int,
+                          spec: AscendSpec = ASCEND) -> float:
+    """Paper Fig. 2: best Split-K W4A16 vs data-parallel W4A16."""
+    t_dp = w4a16_time_ascend(M, N, K, split_k=1, spec=spec)
+    t_sk = w4a16_time_ascend(
+        M, N, K, split_k=best_split_k_ascend(M, N, K, spec), spec=spec)
+    return t_dp / t_sk
+
+
+def w4a16_speedup_ascend(M: int, N: int, K: int,
+                         spec: AscendSpec = ASCEND) -> float:
+    """Paper Fig. 3: best-split W4A16 vs native FP16."""
+    s = best_split_k_ascend(M, N, K, spec)
+    return fp16_time_ascend(M, N, K, spec) / \
+        w4a16_time_ascend(M, N, K, split_k=s, spec=spec)
+
+
+# ---------------------------------------------------------------------------
+# TPU v5e fused-kernel model (the beyond-paper comparison)
+# ---------------------------------------------------------------------------
+
+def w4a16_time_tpu_fused(M: int, N: int, K: int,
+                         spec: TPUv5eSpec = TPU_V5E) -> float:
+    """Fused kernel: INT4 weights cross HBM once; dequant lives in VMEM.
+    No round-trip term — the 'direct vector→cube data path'."""
+    traffic = 2 * M * K + 0.5 * K * N + 2 * M * N
+    return max((2 * M * N * K) / spec.flops, traffic / spec.hbm_bw)
+
+
+def w4a16_time_tpu_decoupled(M: int, N: int, K: int, *, split_k: int = 1,
+                             spec: TPUv5eSpec = TPU_V5E) -> float:
+    """Paper-faithful pipeline on TPU: workspace round-trips through HBM
+    (TPU has no shared L2 between kernels — the penalty is *worse* than
+    Ascend's, which is exactly why the fused kernel is the right port)."""
+    t1 = (0.5 * K * N + 2 * K * N) / spec.hbm_bw
+    t2 = max((2 * M * N * K) / spec.flops,
+             (2 * M * K + 2 * K * N + 4 * M * N * split_k) / spec.hbm_bw)
+    t3 = (4 * M * N * split_k + 2 * M * N) / spec.hbm_bw if split_k > 1 else 0
+    return t1 + t2 + t3
+
+
+def fp16_time_tpu(M: int, N: int, K: int,
+                  spec: TPUv5eSpec = TPU_V5E) -> float:
+    traffic = 2 * M * K + 2 * K * N + 2 * M * N
+    return max((2 * M * N * K) / spec.flops, traffic / spec.hbm_bw)

@@ -1,0 +1,182 @@
+"""INT4 weight-only quantization core (the paper's W4A16 substrate).
+
+Implements uniform affine/symmetric group-wise quantization (paper Eq. 1):
+
+    x_q = round(x / s) + z          (z = 0 for symmetric)
+    Dequant(x_q) = s * (x_q - z)    (paper Eq. 2)
+
+Storage convention
+------------------
+Weights are ``(K, N)`` (contraction dim first, like ``x @ w``).  Two INT4
+values are packed per ``int8`` byte **along K**:
+
+    byte[k, n] = (q[2k+1, n] << 4) | (q[2k, n] & 0xF)
+
+so the packed tensor is ``(K//2, N)`` int8 — byte-identical footprint to the
+Ascend INT32-nibble packing (K*N/2 bytes).  N stays the minor (lane)
+dimension, which is what the TPU kernels want.
+
+Scales (and optional zero-points) are per ``(K-group, N)``:
+``scales[(k // group_size), n]``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+INT4_MIN = -8
+INT4_MAX = 7
+DEFAULT_GROUP_SIZE = 128
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """A W4A16 weight: packed int4 payload + group-wise scales (+ zeros)."""
+
+    packed: jax.Array          # (K//2, N) int8, two nibbles per byte
+    scales: jax.Array          # (K//group_size, N) float32/bfloat16
+    zeros: Optional[jax.Array]  # (K//group_size, N) same dtype, or None (symmetric)
+    group_size: int
+    out_dtype: jnp.dtype       # dtype dequantized weights are materialized in
+
+    # -- pytree plumbing ---------------------------------------------------
+    def tree_flatten(self):
+        children = (self.packed, self.scales, self.zeros)
+        aux = (self.group_size, self.out_dtype)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        packed, scales, zeros = children
+        group_size, out_dtype = aux
+        return cls(packed, scales, zeros, group_size, out_dtype)
+
+    # -- convenience -------------------------------------------------------
+    @property
+    def shape(self):
+        return (self.packed.shape[0] * 2, self.packed.shape[1])
+
+    @property
+    def K(self) -> int:
+        return self.packed.shape[0] * 2
+
+    @property
+    def N(self) -> int:
+        return self.packed.shape[1]
+
+    def nbytes_packed(self) -> int:
+        n = self.packed.size  # 1 byte each
+        n += self.scales.size * self.scales.dtype.itemsize
+        if self.zeros is not None:
+            n += self.zeros.size * self.zeros.dtype.itemsize
+        return n
+
+
+# ---------------------------------------------------------------------------
+# packing
+# ---------------------------------------------------------------------------
+
+def pack_int4(q: jax.Array) -> jax.Array:
+    """Pack int4 values (stored in int8, range [-8, 7]) pairwise along axis 0.
+
+    ``q`` has shape (K, N) with K even; returns (K//2, N) int8.
+    """
+    if q.shape[0] % 2:
+        raise ValueError(f"K must be even to pack, got {q.shape}")
+    lo = q[0::2].astype(jnp.uint8) & 0xF
+    hi = q[1::2].astype(jnp.uint8) & 0xF
+    return ((hi << 4) | lo).astype(jnp.int8)
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_int4` → (K, N) int8 in [-8, 7].
+
+    Uses shift-based sign extension (``(b << 4) >> 4``), the same trick the
+    paper's vector-core dequant uses and what lowers to cheap VPU ops on TPU.
+    """
+    b = packed.astype(jnp.int8)
+    lo = jnp.left_shift(b, 4)
+    lo = jnp.right_shift(lo, 4)          # arithmetic shift → sign-extended
+    hi = jnp.right_shift(b, 4)
+    k2, n = packed.shape
+    return jnp.stack([lo, hi], axis=1).reshape(2 * k2, n)
+
+
+# ---------------------------------------------------------------------------
+# quantize / dequantize
+# ---------------------------------------------------------------------------
+
+def quantize(
+    w: jax.Array,
+    *,
+    group_size: int = DEFAULT_GROUP_SIZE,
+    symmetric: bool = True,
+    scale_dtype: jnp.dtype = jnp.float32,
+    out_dtype: Optional[jnp.dtype] = None,
+) -> QuantizedTensor:
+    """Group-wise INT4 quantization of a (K, N) weight matrix."""
+    if w.ndim != 2:
+        raise ValueError(f"quantize expects 2-D (K, N) weight, got {w.shape}")
+    K, N = w.shape
+    if K % group_size:
+        raise ValueError(f"K={K} not divisible by group_size={group_size}")
+    if (K // group_size) % 1 or group_size % 2:
+        raise ValueError("group_size must be even")
+    out_dtype = jnp.dtype(out_dtype or w.dtype)
+
+    g = w.astype(jnp.float32).reshape(K // group_size, group_size, N)
+    if symmetric:
+        amax = jnp.max(jnp.abs(g), axis=1)                      # (K/g, N)
+        s = jnp.maximum(amax / INT4_MAX, 1e-8)
+        z = None
+        q = jnp.round(g / s[:, None, :])
+    else:
+        gmax = jnp.max(g, axis=1)
+        gmin = jnp.min(g, axis=1)
+        s = jnp.maximum((gmax - gmin) / (INT4_MAX - INT4_MIN), 1e-8)
+        z = jnp.round(-gmin / s) + INT4_MIN                     # zero-point
+        q = jnp.round(g / s[:, None, :]) + z[:, None, :]
+    q = jnp.clip(q, INT4_MIN, INT4_MAX).astype(jnp.int8).reshape(K, N)
+    return QuantizedTensor(
+        packed=pack_int4(q),
+        scales=s.astype(scale_dtype),
+        zeros=None if z is None else z.astype(scale_dtype),
+        group_size=group_size,
+        out_dtype=out_dtype,
+    )
+
+
+def dequantize(qt: QuantizedTensor) -> jax.Array:
+    """Materialize the full (K, N) weight in ``qt.out_dtype`` (paper Eq. 2)."""
+    q = unpack_int4(qt.packed).astype(jnp.float32)
+    K, N = q.shape
+    g = qt.group_size
+    s = jnp.repeat(qt.scales.astype(jnp.float32), g, axis=0)    # (K, N)
+    if qt.zeros is not None:
+        z = jnp.repeat(qt.zeros.astype(jnp.float32), g, axis=0)
+        q = q - z
+    return (q * s).astype(qt.out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# reference W4A16 matmul (pure jnp oracle; kernels are checked against this)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=())
+def w4a16_matmul_ref(x: jax.Array, qt: QuantizedTensor) -> jax.Array:
+    """``x @ Dequant(W)`` — the paper's Eq. 2 computed the naive way."""
+    w = dequantize(qt)
+    acc = jnp.dot(
+        x.astype(qt.out_dtype), w, preferred_element_type=jnp.float32
+    )
+    return acc.astype(x.dtype)
+
+
+def quantization_error_bound(qt: QuantizedTensor) -> jax.Array:
+    """Per-group max representable rounding error: |w - deq(q(w))| <= s/2."""
+    return qt.scales.astype(jnp.float32) / 2.0

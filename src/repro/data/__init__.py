@@ -1,0 +1,1 @@
+from repro.data.pipeline import SyntheticTokenStream, make_batch_iterator  # noqa: F401

@@ -1,0 +1,59 @@
+"""Deterministic synthetic token pipeline, sharded per host.
+
+Production data loaders stream tokenized shards per host; here the "shard"
+is a counter-based PRNG stream, which gives the same three properties the
+trainer needs: determinism (resume from a step id reproduces the batch),
+host-sharding (each data-parallel rank draws a disjoint stream), and
+backpressure-free prefetch (pure compute). The generated text has Zipfian
+token statistics plus a short-range copy structure so the LM loss actually
+decreases during the example runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticTokenStream:
+    vocab_size: int
+    seq_len: int
+    batch_size: int            # per-host batch
+    seed: int = 0
+    host_id: int = 0
+    num_hosts: int = 1
+
+    def batch_at(self, step: int) -> dict:
+        """Deterministic batch for a global step (resume-safe)."""
+        rng = np.random.default_rng(
+            (self.seed * 1_000_003 + step) * 65_537 + self.host_id)
+        B, S, V = self.batch_size, self.seq_len, self.vocab_size
+        # Zipfian marginals
+        ranks = np.arange(1, V + 1)
+        probs = 1.0 / ranks
+        probs /= probs.sum()
+        toks = rng.choice(V, size=(B, S + 1), p=probs).astype(np.int32)
+        # short-range copy structure: repeat the previous token sometimes
+        rep = rng.random((B, S + 1)) < 0.3
+        rep[:, 0] = False
+        idx = np.where(rep, np.roll(toks, 1, axis=1), toks)
+        tokens = idx[:, :-1]
+        labels = idx[:, 1:].copy()
+        return {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
+
+
+def make_batch_iterator(stream: SyntheticTokenStream, *,
+                        start_step: int = 0,
+                        extras: Optional[dict] = None) -> Iterator[dict]:
+    """Infinite iterator from a step offset (checkpoint-resume entry point)."""
+    step = start_step
+    while True:
+        b = stream.batch_at(step)
+        if extras:
+            b = {**b, **extras}
+        yield b
+        step += 1

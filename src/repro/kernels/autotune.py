@@ -1,0 +1,77 @@
+"""Analytic block-size autotuner for the fused W4A16 kernel.
+
+No hardware timing is available in this container, so candidates are ranked
+by the TPU v5e cost model under a hard VMEM-budget constraint — the same
+"reason from the lowered working set" methodology as EXPERIMENTS.md §Perf:
+
+  * VMEM working set (double-buffered inputs + fp32 accumulator) must fit;
+  * MXU dims want 128-alignment (lane width) and big K blocks amortize the
+    per-block dequant;
+  * grid shape balances against megacore parallelism via the wave model.
+
+Returns (block_m, block_n, block_k, split_k) for a given GEMM shape.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+from repro.core.costmodel import TPU_V5E
+from repro.kernels import common
+
+VMEM_BUDGET = 96 * 1024 * 1024     # leave headroom of the ~128MB v5e VMEM
+NUM_PARALLEL = 2                   # TensorCores per chip (megacore)
+
+
+def vmem_working_set(bm: int, bn: int, bk: int, group: int,
+                     act_bytes: int = 2) -> int:
+    """Bytes resident per grid step (double-buffered ins + fp32 acc)."""
+    x_blk = bm * bk * act_bytes
+    w_blk = (bk // 2) * bn                 # packed int4
+    s_blk = max(1, bk // group) * bn * 4   # scales fp32
+    deq = bk * bn * act_bytes              # dequantized tile feeding the MXU
+    acc = bm * bn * 4
+    return 2 * (x_blk + w_blk + s_blk) + deq + acc
+
+
+def _score(M, N, K, bm, bn, bk, split_k):
+    """Estimated kernel time: HBM traffic + dequant + wave quantization."""
+    ks = K // split_k
+    n_m, n_n, n_k = -(-M // bm), -(-N // bn), ks // bk
+    tiles = n_m * n_n * split_k
+    waves = -(-tiles // NUM_PARALLEL)
+    eff = tiles / (waves * NUM_PARALLEL)
+    flops = 2 * M * N * K
+    t_compute = flops / (TPU_V5E.flops * eff)
+    # x re-read per N tile; packed W re-read per M tile; partials out
+    traffic = (2 * M * K * n_n + 0.5 * K * N * n_m
+               + (4 * split_k if split_k > 1 else 2) * M * N)
+    t_mem = traffic / TPU_V5E.hbm_bw
+    return max(t_compute, t_mem)
+
+
+@functools.lru_cache(maxsize=4096)
+def autotune_w4a16(M: int, N: int, K: int,
+                   group: int = 128) -> Tuple[int, int, int, int]:
+    """Best (bm, bn, bk, split_k) under the VMEM budget."""
+    best = None
+    bm = common.largest_divisor(max(M, 8), 128)
+    for bn in (128, 256, 512):
+        if N % bn:
+            continue
+        for bk in (256, 512, 1024, 2048):
+            if K % bk or not (bk % group == 0 or group % bk == 0):
+                continue
+            if vmem_working_set(bm, bk=bk, bn=bn, group=group) > VMEM_BUDGET:
+                continue
+            for s in (1, 2, 4, 8):
+                if K % (s * bk) and (K // s) % bk:
+                    continue
+                if K % s or (K // s) % bk:
+                    continue
+                t = _score(M, N, K, bm, bn, bk, s)
+                if best is None or t < best[0]:
+                    best = (t, bm, bn, bk, s)
+    if best is None:                          # odd shapes: conservative
+        return (bm, common.pick_block(N, 256), common.pick_block(K, 512), 1)
+    return best[1:]

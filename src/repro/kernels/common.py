@@ -1,0 +1,85 @@
+"""Shared helpers for the Pallas TPU kernels.
+
+Block-size selection is the TPU analogue of the paper's ``[m, n, k]`` block
+parameter (Alg. 1): blocks must fit VMEM (the L1/L0 analogue) and keep the
+MXU dimensions 128-aligned.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LANE = 128          # TPU lane width — minor dim of every block
+SUBLANE = 8         # fp32 sublane; bf16 is 16 but 8 keeps blocks legal
+VMEM_BUDGET = 96 * 1024 * 1024  # generous interpret-mode budget; real TPU ~128MB v5e? use 96MB guard
+
+
+def is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def resolve_interpret(interpret) -> bool:
+    """interpret=None → auto (interpret on CPU, compiled on TPU)."""
+    if interpret is None:
+        return is_cpu()
+    return bool(interpret)
+
+
+def largest_divisor(dim: int, target: int, multiple_of: int = 1) -> int:
+    """Largest d ≤ target with dim % d == 0 and d % multiple_of == 0."""
+    target = min(target, dim)
+    for d in range(target, 0, -1):
+        if dim % d == 0 and d % multiple_of == 0:
+            return d
+    return multiple_of if dim % multiple_of == 0 else 1
+
+
+def pick_block(dim: int, target: int, align: int = LANE) -> int:
+    """Prefer a LANE-aligned divisor of ``dim`` near ``target``."""
+    if dim % align == 0:
+        d = largest_divisor(dim, target, align)
+        if d >= align:
+            return d
+    return largest_divisor(dim, target)
+
+
+def pad_dim(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    """Zero-pad ``axis`` of x up to the next multiple."""
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def compiler_params(dimension_semantics):
+    """Best-effort TPU compiler params (ignored under interpret mode)."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        if hasattr(pltpu, "CompilerParams"):
+            return pltpu.CompilerParams(dimension_semantics=dimension_semantics)
+        return pltpu.TPUCompilerParams(dimension_semantics=dimension_semantics)
+    except Exception:  # pragma: no cover - older/newer API drift
+        return None
+
+
+def dequant_block(packed, scales, zeros, repeat: int, compute_dtype):
+    """In-VMEM INT4→float dequant of one weight block (the AIV role, fused).
+
+    packed : (bk//2, bn) int8 — two nibbles per byte along K
+    scales : (bk//repeat, bn) float — group scales covering this block
+    zeros  : same shape as scales, or None (symmetric)
+    returns: (bk, bn) compute_dtype
+    """
+    b = packed[...]
+    lo = jnp.right_shift(jnp.left_shift(b, 4), 4)   # sign-extend low nibble
+    hi = jnp.right_shift(b, 4)                      # arithmetic → sign-extended
+    k2, bn = b.shape
+    q = jnp.stack([lo, hi], axis=1).reshape(2 * k2, bn).astype(jnp.float32)
+    s = jnp.repeat(scales[...].astype(jnp.float32), repeat, axis=0)
+    if zeros is not None:
+        q = q - jnp.repeat(zeros[...].astype(jnp.float32), repeat, axis=0)
+    return (q * s).astype(compute_dtype)

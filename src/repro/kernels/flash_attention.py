@@ -1,0 +1,135 @@
+"""Flash attention as a Pallas TPU kernel (prefill/training hot spot).
+
+Online-softmax tiling: grid ``(B·Hq, S/bq, Skv/bk)`` with the KV axis
+innermost; running max/denominator/accumulator live in VMEM scratch (the
+L0C role), the output block is written on the last KV step. GQA is handled
+in the index maps (query head → kv head), so K/V are never materialized at
+Hq width. Causal + sliding-window masking is positional (iota-based), which
+keeps the same kernel correct for the SWA architectures.
+
+The pure-jnp oracle is ``ref.attention_ref``; the chunked online-softmax in
+models/attention.py computes the identical function and remains the
+CPU/dry-run path (see DESIGN.md §Hardware adaptation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import common
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _make_kernel(scale: float, causal: bool, window: int,
+                 cq: int, ck: int, s_q: int, s_kv: int):
+    def kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+        iq = pl.program_id(1)
+        ik = pl.program_id(2)
+
+        @pl.when(ik == 0)
+        def _init():
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        q = q_ref[0]                                  # (cq, D)
+        k = k_ref[0]                                  # (ck, D)
+        v = v_ref[0]                                  # (ck, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale       # (cq, ck)
+
+        qpos = iq * cq + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 0)
+        kpos = ik * ck + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 1)
+        mask = kpos < s_kv                             # kv padding
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]                          # (cq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                         # (cq, ck)
+        corr = jnp.exp(m_prev - m_new)                 # (cq, 1)
+        l_new = l_ref[:, :1] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+        @pl.when(ik == pl.num_programs(2) - 1)
+        def _flush():
+            o_ref[0] = (acc_ref[...]
+                        / jnp.maximum(l_ref[:, :1], 1e-30)).astype(o_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_kv", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,                 # (B, Sq, Hq, D)
+    k: jax.Array,                 # (B, Skv, Hkv, D)
+    v: jax.Array,                 # (B, Skv, Hkv, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 512,
+    block_kv: int = 512,
+    interpret=None,
+) -> jax.Array:
+    interpret = common.resolve_interpret(interpret)
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = D ** -0.5
+
+    # (B·Hq, S, D) layout; KV stays at Hkv width (GQA via index map)
+    qh = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, D)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
+
+    cq = min(block_q, Sq)
+    ck = min(block_kv, Skv)
+    qh = common.pad_dim(qh, 1, cq)
+    kh = common.pad_dim(kh, 1, ck)
+    vh = common.pad_dim(vh, 1, ck)
+    nq = qh.shape[1] // cq
+    nk = kh.shape[1] // ck
+
+    def kv_row(bh):
+        return (bh // Hq) * Hkv + (bh % Hq) // G
+
+    grid = (B * Hq, nq, nk)
+    out = pl.pallas_call(
+        _make_kernel(scale, causal, window, cq, ck, Sq, Skv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, cq, D), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, ck, D), lambda bh, iq, ik: (kv_row(bh), ik, 0)),
+            pl.BlockSpec((1, ck, D), lambda bh, iq, ik: (kv_row(bh), ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, cq, D), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(qh.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((cq, LANES), jnp.float32),     # running max
+            pltpu.VMEM((cq, LANES), jnp.float32),     # running denom
+            pltpu.VMEM((cq, D), jnp.float32),         # output accumulator
+        ],
+        compiler_params=common.compiler_params(
+            ("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qh, kh, vh)
+    out = out[:, :Sq]
+    return out.reshape(B, Hq, Sq, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's test sweeps shapes/dtypes and asserts allclose against these.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantizedTensor, dequantize, unpack_int4
+
+
+def gemm_ref(x: jax.Array, w: jax.Array, out_dtype=None) -> jax.Array:
+    """Plain tiled-GEMM oracle: fp32 accumulation, cast to out dtype."""
+    out_dtype = out_dtype or x.dtype
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def dequant_ref(
+    packed: jax.Array,
+    scales: jax.Array,
+    zeros: Optional[jax.Array],
+    group_size: int,
+    out_dtype=jnp.bfloat16,
+) -> jax.Array:
+    """Phase-1 oracle: unpack int4 + apply group scales → (K, N) out_dtype."""
+    q = unpack_int4(packed).astype(jnp.float32)
+    s = jnp.repeat(scales.astype(jnp.float32), group_size, axis=0)
+    if zeros is not None:
+        q = q - jnp.repeat(zeros.astype(jnp.float32), group_size, axis=0)
+    return (q * s).astype(out_dtype)
+
+
+def w4a16_ref(x: jax.Array, qt: QuantizedTensor, out_dtype=None) -> jax.Array:
+    """End-to-end W4A16 oracle (paper Eq. 2): C = A · Dequant(W)."""
+    out_dtype = out_dtype or x.dtype
+    w = dequantize(qt)
+    return jnp.dot(
+        x.astype(w.dtype), w, preferred_element_type=jnp.float32
+    ).astype(out_dtype)
+
+
+def splitk_partials_ref(
+    x: jax.Array, w: jax.Array, split_k: int
+) -> jax.Array:
+    """Phase-2 oracle: S partial fp32 GEMMs over K-slices (paper Alg. 1)."""
+    M, K = x.shape
+    _, N = w.shape
+    ks = K // split_k
+    parts = [
+        jnp.dot(
+            x[:, i * ks : (i + 1) * ks],
+            w[i * ks : (i + 1) * ks, :],
+            preferred_element_type=jnp.float32,
+        )
+        for i in range(split_k)
+    ]
+    return jnp.stack(parts, axis=0)  # (S, M, N) fp32
+
+
+def reduce_ref(partials: jax.Array, out_dtype=jnp.bfloat16) -> jax.Array:
+    """Phase-3 oracle: elementwise sum over S + downcast (paper Alg. 1)."""
+    return jnp.sum(partials, axis=0).astype(out_dtype)
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """Full-softmax GQA attention oracle. q:(B,Sq,Hq,D), k/v:(B,Skv,Hkv,D)."""
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D).astype(jnp.float32) * D ** -0.5
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, D).astype(q.dtype)

@@ -1,0 +1,39 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* first init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2×16×16 = 512 chips across two pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests/examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel axes: ('pod','data') multi-pod, ('data',) single."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def degraded_mesh(mesh, *, drop_data: int = 1):
+    """Elastic-rescale helper: rebuild the mesh with fewer data rows
+    (simulates losing a slice and re-lowering on the survivors)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sizes["data"] = sizes["data"] - drop_data
+    n_needed = 1
+    for v in sizes.values():
+        n_needed *= v
+    devs = mesh.devices.reshape(-1)[:n_needed]
+    return jax.sharding.Mesh(
+        devs.reshape(tuple(sizes.values())), tuple(sizes.keys()))

@@ -1,0 +1,37 @@
+"""Per-architecture run settings for the production mesh.
+
+Microbatch counts + FSDP(ZeRO-3) + optimizer-state dtype are what make each
+train cell fit 16 GB/chip HBM; ``zero2`` gathers FSDP weights once per step
+instead of per microbatch (≈micro× less all-gather traffic — see
+EXPERIMENTS.md §Perf) and is enabled wherever the model-sharded weight copy
+fits; fsdp_serve additionally shards serving weights over the data axis
+(weight-gathered decode) for 405B-class models.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.runtime.steps import TrainSettings
+
+PRESETS = {
+    # zero2 copy = params_bf16/16 ≈ 3.5 GB; micro=16 shrinks activation
+    # stacks now that weight regathers are free (§Perf iter G2/G3)
+    "granite-20b": TrainSettings(microbatches=16, fsdp=True, zero2=True),
+    "h2o-danube-1.8b": TrainSettings(microbatches=4, fsdp=True, zero2=True),
+    "starcoder2-7b": TrainSettings(microbatches=4, fsdp=True, zero2=True),
+    # zero2 copy would be 50 GB — stays ZeRO-3 (§Perf iter L1)
+    "llama3-405b": TrainSettings(
+        microbatches=16, fsdp=True, fsdp_serve=True, opt_dtype=jnp.bfloat16),
+    "internvl2-1b": TrainSettings(microbatches=4, fsdp=True, zero2=True),
+    "whisper-small": TrainSettings(microbatches=4, fsdp=True, zero2=True),
+    "rwkv6-7b": TrainSettings(microbatches=4, fsdp=True, zero2=True),
+    # zero2 copy = 5.8 GB on top of 22.7 GB peak — not worth it here
+    "mixtral-8x7b": TrainSettings(microbatches=8, fsdp=True),
+    "olmoe-1b-7b": TrainSettings(microbatches=4, fsdp=True, zero2=True),
+    # ssm scan ys dominate activations — more microbatches (§Perf)
+    "hymba-1.5b": TrainSettings(microbatches=8, fsdp=True, zero2=True),
+}
+
+
+def settings_for(arch: str) -> TrainSettings:
+    return PRESETS.get(arch, TrainSettings())

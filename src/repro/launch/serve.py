@@ -1,0 +1,90 @@
+"""Serving driver: W4A16-quantized prefill + batched greedy decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b \
+        --reduced --batch 4 --prompt-len 32 --gen 16 --strategy fused
+
+This is the paper's deployment scenario: weights quantized to INT4 at load
+time, decode GEMMs run K≫N with small M — the Split-K regime.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.shapes import cache_len_for, ShapeSpec
+from repro.models import layers, transformer as T
+from repro.runtime import steps as rsteps
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(configs.ARCHS))
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--strategy", default="xla",
+                    choices=["xla", "fused", "decoupled", "reference"])
+    ap.add_argument("--no-quant", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = (configs.get_reduced if args.reduced else configs.get_config)(
+        args.arch)
+    cfg = dataclasses.replace(cfg, w4a16_strategy=args.strategy)
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg)
+    if not args.no_quant:
+        params = layers.quantize_tree(params, group_size=cfg.group_size,
+                                      min_size=0)
+        qbytes = sum(
+            x.nbytes_packed() if hasattr(x, "nbytes_packed") else x.nbytes
+            for x in jax.tree.leaves(
+                params, is_leaf=lambda t: hasattr(t, "nbytes_packed")))
+        print(f"[serve] {cfg.name} W4A16 ({args.strategy}); "
+              f"weights {qbytes/1e6:.1f} MB on disk")
+
+    B, P, G = args.batch, args.prompt_len, args.gen
+    cache_len = min(P + G, cache_len_for(
+        cfg, ShapeSpec("serve", P + G, B, "decode")))
+    tokens = jax.random.randint(key, (B, P), 0, cfg.vocab_size)
+    extras = {}
+    if cfg.vision_prefix:
+        extras["prefix_embeds"] = jax.random.normal(
+            key, (B, cfg.vision_prefix, cfg.d_model), cfg.dtype)
+    if cfg.family == "encdec":
+        extras["audio_embeds"] = jax.random.normal(
+            key, (B, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+
+    prefill = jax.jit(rsteps.make_prefill_step(cfg, cache_len))
+    serve = jax.jit(rsteps.make_serve_step(cfg))
+
+    t0 = time.time()
+    last_logits, state = prefill(params, {"tokens": tokens, **extras})
+    jax.block_until_ready(last_logits)
+    t_prefill = time.time() - t0
+
+    tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+    pos0 = P + (cfg.vision_prefix or 0)
+    out_tokens = [tok]
+    t0 = time.time()
+    for i in range(G - 1):
+        pos = jnp.full((B,), pos0 + i, jnp.int32)
+        res = serve(params, {"state": state, "tokens": tok, "pos": pos})
+        tok, state = res["next"], res["state"]
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    t_dec = time.time() - t0
+    gen = jnp.stack(out_tokens, axis=1)
+    print(f"[serve] prefill {P} toks: {t_prefill*1e3:.1f} ms; "
+          f"decode {G-1} steps: {t_dec/(max(G-1,1))*1e3:.2f} ms/tok")
+    print(f"[serve] sample generation (batch 0): {gen[0].tolist()}")
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Model/run configuration shared by all architectures."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax.numpy as jnp
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | rwkv | hybrid | encdec
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    head_dim: Optional[int] = None
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_capacity_factor: float = 1.25
+    moe_manual_dispatch: bool = False  # shard_map dispatch (inference only)
+    ssm_state: int = 0
+    ssm_expand: int = 1              # d_inner = ssm_expand * d_model
+    sliding_window: int = 0          # 0 = full attention
+    rope_theta: float = 1_000_000.0
+    encoder_layers: int = 0
+    encoder_seq: int = 0             # audio frames (stub frontend)
+    vision_prefix: int = 0           # vision patch embeds (stub frontend)
+    mlp_type: str = "swiglu"         # swiglu | gelu
+    norm_type: str = "rmsnorm"       # rmsnorm | layernorm
+    tie_embeddings: bool = False
+    dtype: Any = jnp.bfloat16
+
+    # W4A16 serving (the paper's technique, first-class)
+    quantize_serve: bool = True
+    group_size: int = 128
+    w4a16_strategy: str = "auto"     # auto | fused | decoupled | xla | reference
+
+    # training
+    remat: bool = True
+    attn_impl: str = "chunked"       # chunked (jnp, CPU/dry-run) | flash
+                                     # (Pallas kernel — TPU deployment)
+    seq_parallel: bool = False   # Megatron SP: residual sharded on S over model
+    bf16_partials: bool = False      # row-parallel matmul partial sums cross
+                                     # shards in bf16 (halves TP activation
+                                     # all-reduce traffic; MXU still
+                                     # accumulates fp32 within a shard)
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def padded_vocab(self) -> int:
+        return _round_up(self.vocab_size, 256)
+
+    @property
+    def attn_free(self) -> bool:
+        return self.family == "rwkv"
+
+    def supports_long_context(self) -> bool:
+        """True if decode state is O(window)/O(1) — eligible for long_500k."""
+        return self.family in ("rwkv", "hybrid") or self.sliding_window > 0
+
+    def param_count(self) -> int:
+        """Analytic parameter count (total, embeddings included)."""
+        d, ff, V = self.d_model, self.d_ff, self.padded_vocab
+        attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        if self.mlp_type == "swiglu":
+            mlp = 3 * d * ff
+        else:
+            mlp = 2 * d * ff
+        per_layer = 0
+        if self.family == "dense":
+            per_layer = attn + mlp
+        elif self.family == "moe":
+            per_layer = attn + self.num_experts * 3 * d * ff + d * self.num_experts
+        elif self.family == "rwkv":
+            per_layer = 6 * d * d + 2 * d * ff
+        elif self.family == "hybrid":
+            ssm = (d * self.d_inner * 2 + d * 2 * self.ssm_state
+                   + d * self.d_inner)
+            per_layer = attn + ssm + mlp
+        elif self.family == "encdec":
+            per_layer = attn + mlp                      # decoder self
+            per_layer += attn                           # decoder cross
+        total = self.num_layers * per_layer
+        if self.family == "encdec":
+            total += self.encoder_layers * (attn + mlp)
+        total += V * d                                  # embed
+        if not self.tie_embeddings:
+            total += V * d                              # lm head
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE uses top-k of experts)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        dense_part = (self.param_count()
+                      - self.num_layers * self.num_experts * 3 * d * ff)
+        return dense_part + self.num_layers * self.experts_per_token * 3 * d * ff

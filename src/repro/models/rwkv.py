@@ -1,0 +1,111 @@
+"""RWKV-6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+Attention-free linear recurrence with per-head matrix state
+``S_t = diag(w_t) S_{t-1} + k_t^T v_t`` and readout ``o_t = r_t S_t`` —
+constant-size state, which is why this arch runs the 500k-token decode cell.
+
+The heavy FLOPs are the r/k/v/g/w/output projections and channel-mix
+linears — all ordinary ``layers.linear`` calls, hence W4A16-quantizable
+(the recurrence itself is element-wise "vector-core" work and stays high
+precision; see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def init_rwkv_block(key, d_model: int, d_ff: int, num_heads: int, dtype):
+    ks = jax.random.split(key, 8)
+    lin = lambda k, di, do: layers.init_linear(k, di, do, dtype)
+    return {
+        "tm_r": lin(ks[0], d_model, d_model),
+        "tm_k": lin(ks[1], d_model, d_model),
+        "tm_v": lin(ks[2], d_model, d_model),
+        "tm_g": lin(ks[3], d_model, d_model),
+        "tm_w": lin(ks[4], d_model, d_model),   # data-dependent decay (Finch)
+        "tm_o": lin(ks[5], d_model, d_model),
+        "w_bias": jnp.full((d_model,), -6.0, jnp.float32),
+        "cm_k": lin(ks[6], d_model, d_ff),
+        "cm_v": lin(ks[7], d_ff, d_model),
+    }
+
+
+def _heads(x, H):
+    *lead, d = x.shape
+    return x.reshape(*lead, H, d // H)
+
+
+def rwkv_state_init(batch: int, d_model: int, num_heads: int):
+    hd = d_model // num_heads
+    return {
+        "wkv": jnp.zeros((batch, num_heads, hd, hd), jnp.float32),
+        "shift": jnp.zeros((batch, d_model), jnp.float32),
+        "cm_shift": jnp.zeros((batch, d_model), jnp.float32),
+    }
+
+
+def _proj(p, x, cfg):
+    return layers.linear(p, x, cfg)
+
+
+def time_mix_seq(p, x: jax.Array, state, *, num_heads: int, cfg=None):
+    """Sequence mode: x (B, S, d) → (B, S, d), scan over time."""
+    B, S, d = x.shape
+    H = num_heads
+    hd = d // H
+    prev = jnp.concatenate([state["shift"].astype(x.dtype)[:, None], x[:, :-1]], 1)
+    xm = 0.5 * (x + prev)                       # token-shift mixing
+    r = _heads(_proj(p["tm_r"], xm, cfg), H).astype(jnp.float32)
+    k = _heads(_proj(p["tm_k"], xm, cfg), H).astype(jnp.float32)
+    v = _heads(_proj(p["tm_v"], xm, cfg), H).astype(jnp.float32)
+    g = _proj(p["tm_g"], xm, cfg).astype(jnp.float32)
+    w = jax.nn.softplus(
+        _proj(p["tm_w"], xm, cfg).astype(jnp.float32) + p["w_bias"])
+    w = jnp.exp(-w)                              # per-channel decay in (0,1)
+    w = _heads(w, H)                             # (B, S, H, hd)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                     # (B,H,hd) each
+        s = s * wt[..., None] + kt[..., None] * vt[..., None, :]
+        # s: (B,H,hd_k,hd_v); o = r · S
+        o = jnp.einsum("bhk,bhkv->bhv", rt, s)
+        return s, o
+
+    inps = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    s_fin, o = jax.lax.scan(step, state["wkv"], inps)
+    o = o.transpose(1, 0, 2, 3).reshape(B, S, d)
+    o = o * jax.nn.silu(g)
+    out = _proj(p["tm_o"], o.astype(x.dtype), cfg)
+    new_state = dict(state, wkv=s_fin, shift=x[:, -1].astype(jnp.float32))
+    return out, new_state
+
+
+def time_mix_step(p, x: jax.Array, state, *, num_heads: int, cfg=None):
+    """Decode mode: x (B, d) one token → (B, d)."""
+    B, d = x.shape
+    H = num_heads
+    xm = 0.5 * (x + state["shift"].astype(x.dtype))
+    r = _heads(_proj(p["tm_r"], xm, cfg), H).astype(jnp.float32)
+    k = _heads(_proj(p["tm_k"], xm, cfg), H).astype(jnp.float32)
+    v = _heads(_proj(p["tm_v"], xm, cfg), H).astype(jnp.float32)
+    g = _proj(p["tm_g"], xm, cfg).astype(jnp.float32)
+    w = jax.nn.softplus(
+        _proj(p["tm_w"], xm, cfg).astype(jnp.float32) + p["w_bias"])
+    w = _heads(jnp.exp(-w), H)
+    s = state["wkv"] * w[..., None] + k[..., None] * v[..., None, :]
+    o = jnp.einsum("bhk,bhkv->bhv", r, s).reshape(B, d)
+    o = o * jax.nn.silu(g)
+    out = _proj(p["tm_o"], o.astype(x.dtype), cfg)
+    new_state = dict(state, wkv=s, shift=x.astype(jnp.float32))
+    return out, new_state
+
+
+def channel_mix(p, x: jax.Array, prev: jax.Array, cfg=None):
+    """RWKV channel-mix FFN with token shift. x, prev: (..., d)."""
+    xm = 0.5 * (x + prev.astype(x.dtype))
+    k = _proj(p["cm_k"], xm, cfg)
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    return _proj(p["cm_v"], k, cfg)

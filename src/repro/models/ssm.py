@@ -1,0 +1,73 @@
+"""Mamba-style selective SSM head (the SSM half of Hymba's hybrid layers).
+
+Diagonal selective state space: per channel c and state n,
+    h_t = exp(dt_t * A[c,n]) * h_{t-1} + dt_t * B_t[n] * x_t[c]
+    y_t = sum_n C_t[n] * h_t[c,n] + D[c] * x_t[c]
+with input-dependent dt/B/C (the "selective" part). State is
+(B, d_inner, ssm_state) — constant in sequence length, so hybrid archs run
+the 500k decode cell. Projections are quantizable linears.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def init_ssm(key, d_model: int, d_inner: int, ssm_state: int, dtype):
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": layers.init_linear(ks[0], d_model, d_inner, dtype),
+        "bc_proj": layers.init_linear(ks[1], d_model, 2 * ssm_state, dtype),
+        "dt_proj": layers.init_linear(ks[2], d_model, d_inner, dtype),
+        "out_proj": layers.init_linear(ks[3], d_inner, d_model, dtype),
+        "A_log": jnp.log(
+            jnp.broadcast_to(
+                jnp.arange(1, ssm_state + 1, dtype=jnp.float32), (d_inner, ssm_state)
+            )
+        ),
+        "D": jnp.ones((d_inner,), jnp.float32),
+    }
+
+
+def ssm_state_init(batch: int, d_inner: int, ssm_state: int):
+    return jnp.zeros((batch, d_inner, ssm_state), jnp.float32)
+
+
+def _gates(p, x, cfg):
+    u = layers.linear(p["in_proj"], x, cfg).astype(jnp.float32)   # (..., d_inner)
+    bc = layers.linear(p["bc_proj"], x, cfg).astype(jnp.float32)
+    B, C = jnp.split(bc, 2, axis=-1)                               # (..., n)
+    dt = jax.nn.softplus(
+        layers.linear(p["dt_proj"], x, cfg).astype(jnp.float32) - 4.0)
+    A = -jnp.exp(p["A_log"])                                       # (d_inner, n)
+    return u, B, C, dt, A
+
+
+def ssm_seq(p, x: jax.Array, state, cfg=None):
+    """x: (B, S, d_model) → (B, S, d_model), scan over time."""
+    u, Bm, Cm, dt, A = _gates(p, x, cfg)
+
+    def step(h, inp):
+        ut, bt, ct, dtt = inp                      # (B,d),(B,n),(B,n),(B,d)
+        da = jnp.exp(dtt[..., None] * A)           # (B, d, n)
+        h = h * da + (dtt * ut)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    inps = tuple(a.transpose(1, 0, 2) for a in (u, Bm, Cm, dt))
+    h_fin, ys = jax.lax.scan(step, state, inps)
+    y = ys.transpose(1, 0, 2) + u * p["D"]
+    out = layers.linear(p["out_proj"], y.astype(x.dtype), cfg)
+    return out, h_fin
+
+
+def ssm_step(p, x: jax.Array, state, cfg=None):
+    """x: (B, d_model) one token."""
+    u, Bm, Cm, dt, A = _gates(p, x, cfg)
+    da = jnp.exp(dt[..., None] * A)
+    h = state * da + (dt * u)[..., None] * Bm[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, Cm) + u * p["D"]
+    out = layers.linear(p["out_proj"], y.astype(x.dtype), cfg)
+    return out, h

@@ -1,0 +1,466 @@
+"""Model assembly: init / forward / loss / prefill / decode for all families.
+
+Layer parameters are stacked along a leading L axis and executed with
+``jax.lax.scan`` (+ optional remat) so a 126-layer model lowers as one scanned
+layer — essential for dry-run compile times and the standard structure for
+pipeline-friendly HLO.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, moe, rwkv, ssm
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+
+def _init_attn(key, cfg: ModelConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = cfg.d_model
+    return {
+        "wq": layers.init_linear(k1, d, cfg.q_dim, cfg.dtype),
+        "wk": layers.init_linear(k2, d, cfg.kv_dim, cfg.dtype),
+        "wv": layers.init_linear(k3, d, cfg.kv_dim, cfg.dtype),
+        "wo": layers.init_linear(k4, cfg.q_dim, d, cfg.dtype),
+    }
+
+
+def _init_mlp(key, cfg: ModelConfig):
+    d, ff = cfg.d_model, cfg.d_ff
+    if cfg.mlp_type == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "w_gate": layers.init_linear(k1, d, ff, cfg.dtype),
+            "w_up": layers.init_linear(k2, d, ff, cfg.dtype),
+            "w_down": layers.init_linear(k3, ff, d, cfg.dtype),
+        }
+    k1, k2 = jax.random.split(key, 2)
+    return {
+        "w_up": layers.init_linear(k1, d, ff, cfg.dtype, bias=True),
+        "w_down": layers.init_linear(k2, ff, d, cfg.dtype, bias=True),
+    }
+
+
+def _init_norm(cfg: ModelConfig):
+    if cfg.norm_type == "layernorm":
+        return layers.init_layernorm(cfg.d_model, cfg.dtype)
+    return layers.init_rmsnorm(cfg.d_model, cfg.dtype)
+
+
+def _norm(cfg, p, x):
+    if cfg.norm_type == "layernorm":
+        return layers.layernorm(p, x)
+    return layers.rmsnorm(p, x)
+
+
+def _init_layer(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": _init_norm(cfg), "norm2": _init_norm(cfg)}
+    if cfg.family in ("dense", "moe", "hybrid", "encdec"):
+        p["attn"] = _init_attn(ks[0], cfg)
+    if cfg.family in ("dense", "hybrid", "encdec"):
+        p["mlp"] = _init_mlp(ks[1], cfg)
+    if cfg.family == "moe":
+        p["moe"] = moe.init_moe(ks[1], cfg.d_model, cfg.d_ff, cfg.num_experts,
+                                cfg.dtype)
+    if cfg.family == "rwkv":
+        p.pop("attn", None)
+        blk = rwkv.init_rwkv_block(ks[0], cfg.d_model, cfg.d_ff,
+                                   cfg.num_heads, cfg.dtype)
+        p.update(blk)
+    if cfg.family == "hybrid":
+        p["ssm"] = ssm.init_ssm(ks[2], cfg.d_model, cfg.d_inner,
+                                cfg.ssm_state, cfg.dtype)
+    if cfg.family == "encdec":
+        p["cross"] = _init_attn(ks[2], cfg)
+        p["norm3"] = _init_norm(cfg)
+    return p
+
+
+def _init_enc_layer(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": _init_norm(cfg), "norm2": _init_norm(cfg),
+        "attn": _init_attn(ks[0], cfg), "mlp": _init_mlp(ks[1], cfg),
+    }
+
+
+def init_params(key, cfg: ModelConfig):
+    """Dense (trainable) parameters; quantize with ``quantize_params``."""
+    kE, kL, kH, kEnc = jax.random.split(key, 4)
+    params: Dict[str, Any] = {
+        "embed": layers.init_embedding(kE, cfg.padded_vocab, cfg.d_model,
+                                       cfg.dtype),
+        "final_norm": _init_norm(cfg),
+    }
+    lkeys = jax.random.split(kL, cfg.num_layers)
+    params["layers"] = jax.vmap(lambda k: _init_layer(k, cfg))(lkeys)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.init_linear(
+            kH, cfg.d_model, cfg.padded_vocab, cfg.dtype)
+    if cfg.family == "encdec":
+        ekeys = jax.random.split(kEnc, cfg.encoder_layers)
+        params["encoder"] = {
+            "layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(ekeys),
+            "final_norm": _init_norm(cfg),
+        }
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree of params — no allocation (dry-run path)."""
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def quantize_params(params, cfg: ModelConfig):
+    """Serve-time W4A16 transform (the paper's technique applied model-wide)."""
+    return layers.quantize_tree(params, group_size=cfg.group_size)
+
+
+# ---------------------------------------------------------------------------
+# attention sub-block (sequence mode)
+# ---------------------------------------------------------------------------
+
+def _attn_seq(p, cfg: ModelConfig, x, positions, *, causal=True, window=None,
+              return_kv=False):
+    B, S, _ = x.shape
+    H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = layers.shard_hint(
+        layers.linear(p["wq"], x, cfg).reshape(B, S, H, D), "bshd")
+    k = layers.shard_hint(
+        layers.linear(p["wk"], x, cfg).reshape(B, S, Hkv, D), "bshd")
+    v = layers.shard_hint(
+        layers.linear(p["wv"], x, cfg).reshape(B, S, Hkv, D), "bshd")
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    w = cfg.sliding_window if window is None else window
+    if getattr(cfg, "attn_impl", "chunked") == "flash":
+        from repro.kernels.flash_attention import flash_attention
+        o = flash_attention(q, k, v, causal=causal, window=w)
+    else:
+        o = attention.chunked_attention(q, k, v, causal=causal, window=w)
+    out = layers.linear(p["wo"], o.reshape(B, S, H * D), cfg)
+    # materialize the row-parallel partial sum HERE (bf16) — otherwise GSPMD
+    # defers the all-reduce into the next norm's fp32 region (2x ICI bytes)
+    out = layers.shard_hint(out, "bsd")
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def _cross_attn_seq(p, cfg, x, enc_kv):
+    B, S, _ = x.shape
+    H, D = cfg.num_heads, cfg.head_dim
+    q = layers.linear(p["wq"], x, cfg).reshape(B, S, H, D)
+    k, v = enc_kv                                     # (B, T, Hkv, D)
+    o = attention.chunked_attention(q, k, v, causal=False, window=0)
+    return layers.linear(p["wo"], o.reshape(B, S, H * D), cfg)
+
+
+def _mlp(p, cfg, x):
+    if cfg.mlp_type == "swiglu":
+        g = layers.linear(p["w_gate"], x, cfg)
+        u = layers.linear(p["w_up"], x, cfg)
+        h = (jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)) * u
+        return layers.shard_hint(layers.linear(p["w_down"], h, cfg), "bsd")
+    h = layers.linear(p["w_up"], x, cfg)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return layers.shard_hint(layers.linear(p["w_down"], h, cfg), "bsd")
+
+
+# ---------------------------------------------------------------------------
+# sequence-mode layer bodies (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _layer_seq(p, cfg: ModelConfig, h, positions, *, collect_cache, cache_len,
+               enc_kv=None):
+    """One decoder layer in sequence mode. Returns (h, cache_entry)."""
+    h = layers.shard_hint(
+        h, "bsd_sp" if getattr(cfg, "seq_parallel", False) else "bsd")
+    cache_entry = None
+    if cfg.family == "rwkv":
+        B = h.shape[0]
+        st = rwkv.rwkv_state_init(B, cfg.d_model, cfg.num_heads)
+        x1 = _norm(cfg, p["norm1"], h)
+        tm, st = rwkv.time_mix_seq(
+            {k: p[k] for k in ("tm_r", "tm_k", "tm_v", "tm_g", "tm_w",
+                               "tm_o", "w_bias")},
+            x1, st, num_heads=cfg.num_heads, cfg=cfg)
+        h = h + tm
+        x2 = _norm(cfg, p["norm2"], h)
+        prev = jnp.concatenate(
+            [jnp.zeros_like(x2[:, :1]), x2[:, :-1]], axis=1)
+        h = h + rwkv.channel_mix(
+            {k: p[k] for k in ("cm_k", "cm_v")}, x2, prev, cfg)
+        if collect_cache:
+            cache_entry = dict(st, cm_shift=x2[:, -1].astype(jnp.float32))
+        return h, cache_entry
+
+    x1 = _norm(cfg, p["norm1"], h)
+    if cfg.family == "hybrid":
+        B = h.shape[0]
+        attn_out, kv = _attn_seq(p["attn"], cfg, x1, positions, return_kv=True)
+        s0 = ssm.ssm_state_init(B, cfg.d_inner, cfg.ssm_state)
+        ssm_out, s_fin = ssm.ssm_seq(p["ssm"], x1, s0, cfg)
+        h = h + 0.5 * (attn_out + ssm_out)
+        h = h + _mlp(p["mlp"], cfg, _norm(cfg, p["norm2"], h))
+        if collect_cache:
+            kvcache = attention.init_cache(
+                B, cache_len, cfg.num_kv_heads, cfg.head_dim, cfg.dtype)
+            kvcache = attention.cache_prefill(kvcache, *kv)
+            cache_entry = {"kv": kvcache, "ssm": s_fin}
+        return h, cache_entry
+
+    attn_out, kv = _attn_seq(p["attn"], cfg, x1, positions, return_kv=True)
+    h = h + attn_out
+    if cfg.family == "encdec":
+        h = h + _cross_attn_seq(p["cross"], cfg, _norm(cfg, p["norm3"], h),
+                                enc_kv)
+    if cfg.family == "moe":
+        y, _aux = moe.moe_ffn(
+            p["moe"], _norm(cfg, p["norm2"], h),
+            num_experts=cfg.num_experts, top_k=cfg.experts_per_token,
+            capacity_factor=cfg.moe_capacity_factor, cfg=cfg)
+        h = h + y
+    else:
+        h = h + _mlp(p["mlp"], cfg, _norm(cfg, p["norm2"], h))
+    if collect_cache:
+        B = h.shape[0]
+        kvcache = attention.init_cache(
+            B, cache_len, cfg.num_kv_heads, cfg.head_dim, cfg.dtype)
+        cache_entry = {"kv": attention.cache_prefill(kvcache, *kv)}
+    return h, cache_entry
+
+
+def _encoder_forward(params, cfg: ModelConfig, audio_embeds):
+    """Whisper-style encoder over stub frame embeddings (B, T, d)."""
+    h = audio_embeds
+    B, T, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+    def body(h, lp):
+        h = layers.shard_hint(h, "bsd")
+        x1 = _norm(cfg, lp["norm1"], h)
+        h = h + _attn_seq(lp["attn"], cfg, x1, positions, causal=False,
+                          window=0)
+        h = h + _mlp(lp["mlp"], cfg, _norm(cfg, lp["norm2"], h))
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["encoder"]["layers"])
+    return _norm(cfg, params["encoder"]["final_norm"], h)
+
+
+# ---------------------------------------------------------------------------
+# public: forward (train) / loss
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, tokens: jax.Array, *,
+            prefix_embeds: Optional[jax.Array] = None,
+            audio_embeds: Optional[jax.Array] = None,
+            collect_cache: bool = False, cache_len: int = 0):
+    """tokens: (B, S_text) → logits (B, S_total, padded_vocab) fp32.
+
+    prefix_embeds: (B, P, d) vision patches (VLM stub frontend), prepended.
+    audio_embeds:  (B, T, d) audio frames (encdec stub frontend).
+    """
+    h = layers.embed(params["embed"], tokens)
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    h = layers.shard_hint(h, "bsd")
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    enc_kv_stack = None
+    if cfg.family == "encdec":
+        enc_out = _encoder_forward(params, cfg, audio_embeds)
+        # cross-attention K/V per decoder layer
+        T = enc_out.shape[1]
+
+        def cross_kv(lp):
+            k = layers.linear(lp["cross"]["wk"], enc_out, cfg).reshape(
+                B, T, cfg.num_kv_heads, cfg.head_dim)
+            v = layers.linear(lp["cross"]["wv"], enc_out, cfg).reshape(
+                B, T, cfg.num_kv_heads, cfg.head_dim)
+            return (k, v)
+
+        enc_kv_stack = jax.vmap(cross_kv)(params["layers"])   # (L, B, T, H, D)
+
+    def body(h, xs):
+        if cfg.family == "encdec":
+            lp, ekv = xs
+        else:
+            lp, ekv = xs, None
+        h, ce = _layer_seq(lp, cfg, h, positions,
+                           collect_cache=collect_cache, cache_len=cache_len,
+                           enc_kv=ekv)
+        return h, ce
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    xs = (params["layers"], enc_kv_stack) if cfg.family == "encdec" \
+        else params["layers"]
+    h, cache = jax.lax.scan(body, h, xs)
+    h = _norm(cfg, params["final_norm"], h)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], h)
+    else:
+        logits = layers.linear(params["lm_head"], h, cfg).astype(jnp.float32)
+    if collect_cache:
+        extras = {"cache": cache}
+        if cfg.family == "encdec":
+            extras["enc_kv"] = enc_kv_stack
+        return logits, extras
+    return logits
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """Next-token cross entropy. batch: {tokens, labels, [embeds]}."""
+    logits = forward(
+        params, cfg, batch["tokens"],
+        prefix_embeds=batch.get("vision_embeds"),
+        audio_embeds=batch.get("audio_embeds"),
+    )
+    labels = batch["labels"]
+    P = logits.shape[1] - labels.shape[1]
+    if P > 0:                                   # vision prefix positions
+        logits = logits[:, P:]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# public: prefill / decode (serving)
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg: ModelConfig, tokens, *, cache_len: int,
+            prefix_embeds=None, audio_embeds=None):
+    """Run the full prompt; returns (last-token logits, decode state)."""
+    logits, extras = forward(
+        params, cfg, tokens, prefix_embeds=prefix_embeds,
+        audio_embeds=audio_embeds, collect_cache=True, cache_len=cache_len)
+    return logits[:, -1], extras
+
+
+def decode_step(params, cfg: ModelConfig, state, tokens: jax.Array,
+                pos: jax.Array):
+    """One decode step. tokens: (B,) int32; pos: (B,) absolute positions.
+
+    state: {"cache": stacked per-layer cache, ["enc_kv": ...]} from prefill.
+    Returns (logits (B, V) fp32, new state).
+    """
+    h = layers.embed(params["embed"], tokens)            # (B, d)
+    B = h.shape[0]
+    H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+    def attn_step(lp, x, kvcache):
+        q = layers.shard_hint(
+            layers.linear(lp["wq"], x, cfg).reshape(B, H, D), "bhd")
+        k = layers.shard_hint(
+            layers.linear(lp["wk"], x, cfg).reshape(B, Hkv, D), "bhd")
+        v = layers.shard_hint(
+            layers.linear(lp["wv"], x, cfg).reshape(B, Hkv, D), "bhd")
+        q = layers.apply_rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+        k = layers.apply_rope(k[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+        kvcache = attention.cache_insert(kvcache, k, v, pos)
+        o = attention.decode_attention(q, kvcache, pos,
+                                       window=cfg.sliding_window)
+        return layers.linear(lp["wo"], o.reshape(B, H * D), cfg), kvcache
+
+    def body(h, xs):
+        h = layers.shard_hint(h, "bd")
+        if cfg.family == "encdec":
+            lp, ce, ekv = xs
+        else:
+            (lp, ce), ekv = xs, None
+        if cfg.family == "rwkv":
+            x1 = _norm(cfg, lp["norm1"], h)
+            tm, st = rwkv.time_mix_step(
+                {k: lp[k] for k in ("tm_r", "tm_k", "tm_v", "tm_g", "tm_w",
+                                    "tm_o", "w_bias")},
+                x1, ce, num_heads=cfg.num_heads, cfg=cfg)
+            h = h + tm
+            x2 = _norm(cfg, lp["norm2"], h)
+            h = h + rwkv.channel_mix(
+                {k: lp[k] for k in ("cm_k", "cm_v")}, x2,
+                ce["cm_shift"], cfg)
+            ce = dict(st, cm_shift=x2.astype(jnp.float32))
+            return h, ce
+        x1 = _norm(cfg, lp["norm1"], h)
+        if cfg.family == "hybrid":
+            a, kvc = attn_step(lp["attn"], x1, ce["kv"])
+            s_out, s_new = ssm.ssm_step(lp["ssm"], x1, ce["ssm"], cfg)
+            h = h + 0.5 * (a + s_out)
+            h = h + _mlp(lp["mlp"], cfg, _norm(cfg, lp["norm2"], h))
+            return h, {"kv": kvc, "ssm": s_new}
+        a, kvc = attn_step(lp["attn"], x1, ce["kv"])
+        h = h + a
+        if cfg.family == "encdec":
+            x3 = _norm(cfg, lp["norm3"], h)
+            q = layers.linear(lp["cross"]["wq"], x3, cfg).reshape(B, 1, H, D)
+            k, v = ekv
+            o = attention.chunked_attention(q, k, v, causal=False, window=0)
+            h = h + layers.linear(lp["cross"]["wo"],
+                                  o.reshape(B, 1, H * D), cfg)[:, 0]
+        if cfg.family == "moe":
+            y, _ = moe.moe_ffn(
+                lp["moe"], _norm(cfg, lp["norm2"], h),
+                num_experts=cfg.num_experts, top_k=cfg.experts_per_token,
+                capacity_factor=cfg.moe_capacity_factor, cfg=cfg)
+            h = h + y
+        else:
+            h = h + _mlp(lp["mlp"], cfg, _norm(cfg, lp["norm2"], h))
+        return h, {"kv": kvc}
+
+    xs = (params["layers"], state["cache"])
+    if cfg.family == "encdec":
+        xs = (params["layers"], state["cache"], state["enc_kv"])
+    h, new_cache = jax.lax.scan(body, h, xs)
+    h = _norm(cfg, params["final_norm"], h)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], h)
+    else:
+        logits = layers.linear(params["lm_head"], h, cfg).astype(jnp.float32)
+    new_state = dict(state, cache=new_cache)
+    return logits, new_state
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, cache_len: int):
+    """Fresh (empty) decode state — used when lowering decode shapes directly."""
+    L = cfg.num_layers
+
+    def stack(x):
+        return jnp.broadcast_to(x, (L,) + x.shape)
+
+    if cfg.family == "rwkv":
+        st = rwkv.rwkv_state_init(batch, cfg.d_model, cfg.num_heads)
+        cache = jax.tree.map(stack, dict(
+            st, cm_shift=jnp.zeros((batch, cfg.d_model), jnp.float32)))
+    else:
+        kv = attention.init_cache(batch, cache_len, cfg.num_kv_heads,
+                                  cfg.head_dim, cfg.dtype)
+        entry = {"kv": kv}
+        if cfg.family == "hybrid":
+            entry["ssm"] = ssm.ssm_state_init(batch, cfg.d_inner,
+                                              cfg.ssm_state)
+        cache = jax.tree.map(stack, entry)
+    state = {"cache": cache}
+    if cfg.family == "encdec":
+        state["enc_kv"] = (
+            jnp.zeros((cfg.num_layers, batch, cfg.encoder_seq,
+                       cfg.num_kv_heads, cfg.head_dim), cfg.dtype),
+            jnp.zeros((cfg.num_layers, batch, cfg.encoder_seq,
+                       cfg.num_kv_heads, cfg.head_dim), cfg.dtype),
+        )
+    return state

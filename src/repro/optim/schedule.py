@@ -1,0 +1,14 @@
+"""LR schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, warmup: int = 100, total: int = 10_000,
+                    floor: float = 0.1):
+    """Linear warmup → cosine decay to ``floor`` × peak. Returns a scale."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(step / max(warmup, 1), 1.0)
+    prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return warm * cos

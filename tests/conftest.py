@@ -1,0 +1,12 @@
+import os
+import sys
+
+# tests see the default single CPU device (the dry-run, and only the dry-run,
+# forces 512 — see src/repro/launch/dryrun.py)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

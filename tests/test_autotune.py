@@ -1,0 +1,53 @@
+"""Autotuner invariants: VMEM fit, validity, and sane regime behavior."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.quant import quantize
+from repro.kernels import ref
+from repro.kernels.autotune import VMEM_BUDGET, autotune_w4a16, vmem_working_set
+from repro.kernels.w4a16_fused import w4a16_fused
+
+
+@given(st.sampled_from([1, 8, 64, 512]),
+       st.sampled_from([1024, 2048, 8192]),
+       st.sampled_from([2048, 4096, 16384]))
+@settings(deadline=None, max_examples=20)
+def test_autotune_fits_vmem_and_divides(M, N, K):
+    bm, bn, bk, s = autotune_w4a16(M, N, K, group=128)
+    assert vmem_working_set(bm, bn, bk, 128) <= VMEM_BUDGET
+    assert N % bn == 0 and (K // s) % bk == 0 and K % s == 0
+    assert bk % 128 == 0 or 128 % bk == 0
+
+
+def test_autotune_split_k_regimes():
+    """TPU-adapted Split-K: with int4 weights the HBM term dominates every
+    realistic shape and is invariant in S, while a chip has only 2 parallel
+    units (megacore), not
+    Ascend's 32 cores, so intra-chip Split-K only pays when a single
+    output tile leaves a core idle on a compute-bound GEMM; memory-bound
+    decode GEMMs are traffic-invariant in S (the paper's occupancy win
+    moves to mesh-level K-sharding — see DESIGN.md)."""
+    for (M, N, K) in [(128, 128, 65536), (1, 1024, 16384),
+                      (2048, 8192, 4096)]:
+        _, _, _, s = autotune_w4a16(M, N, K)
+        assert s == 1, (M, N, K, s)
+    # the Ascend-faithful heuristic (32-core occupancy) DOES split there:
+    from repro.kernels.ops import choose_split_k
+    assert choose_split_k(1, 1024, 16384) >= 2
+
+
+def test_autotuned_blocks_run_correctly():
+    M, N, K = 8, 1024, 4096
+    bm, bn, bk, s = autotune_w4a16(M, N, K)
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (K, N), jnp.float32)
+    x = jax.random.normal(key, (M, K), jnp.float32)
+    qt = quantize(w, group_size=128)
+    got = w4a16_fused(x, qt, split_k=s, block_m=bm, block_n=bn, block_k=bk,
+                      interpret=True)
+    want = ref.w4a16_ref(x, qt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)

@@ -1,0 +1,69 @@
+"""Checkpoint store: roundtrip, atomicity, quantized leaves, resume."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.core.quant import quantize
+
+
+def make_tree(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "layers": {"w": jax.random.normal(k1, (8, 16), jnp.bfloat16),
+                   "b": jnp.zeros((16,), jnp.float32)},
+        "count": jnp.asarray(7, jnp.int32),
+        "qt": quantize(jax.random.normal(k2, (64, 32)), group_size=32),
+    }
+
+
+def test_roundtrip(tmp_path):
+    tree = make_tree(jax.random.PRNGKey(0))
+    save_checkpoint(str(tmp_path), 3, tree, extra={"note": "hi"})
+    like = jax.tree.map(lambda x: x, tree,
+                        is_leaf=lambda x: hasattr(x, "packed"))
+    out, step, extra = restore_checkpoint(str(tmp_path), like)
+    assert step == 3 and extra == {"note": "hi"}
+    np.testing.assert_array_equal(np.asarray(out["layers"]["w"],
+                                             np.float32),
+                                  np.asarray(tree["layers"]["w"], np.float32))
+    np.testing.assert_array_equal(np.asarray(out["qt"].packed),
+                                  np.asarray(tree["qt"].packed))
+    assert out["qt"].group_size == 32
+
+
+def test_latest_and_multiple_steps(tmp_path):
+    tree = make_tree(jax.random.PRNGKey(1))
+    for s in (1, 5, 12):
+        save_checkpoint(str(tmp_path), s, tree)
+    assert latest_step(str(tmp_path)) == 12
+    _, step, _ = restore_checkpoint(str(tmp_path), tree, step=5)
+    assert step == 5
+
+
+def test_no_checkpoint_returns_none(tmp_path):
+    out, step, extra = restore_checkpoint(str(tmp_path), {"a": jnp.zeros(2)})
+    assert out is None and step is None
+
+
+def test_partial_write_ignored(tmp_path):
+    """A crash mid-save (tmp dir left behind) must not corrupt restore."""
+    tree = make_tree(jax.random.PRNGKey(2))
+    save_checkpoint(str(tmp_path), 1, tree)
+    os.makedirs(tmp_path / "tmp.2")          # simulated dead partial write
+    (tmp_path / "tmp.2" / "arrays.npz").write_bytes(b"garbage")
+    assert latest_step(str(tmp_path)) == 1
+    out, step, _ = restore_checkpoint(str(tmp_path), tree)
+    assert step == 1 and out is not None
+
+
+def test_shape_mismatch_fails_loudly(tmp_path):
+    tree = make_tree(jax.random.PRNGKey(3))
+    save_checkpoint(str(tmp_path), 1, tree)
+    bad = dict(tree, layers={"w": jnp.zeros((9, 16), jnp.bfloat16),
+                             "b": tree["layers"]["b"]})
+    with pytest.raises(ValueError, match="mismatch"):
+        restore_checkpoint(str(tmp_path), bad)

@@ -1,0 +1,44 @@
+"""input_specs: every runnable cell produces well-formed abstract inputs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.configs import SHAPES, input_specs, skip_reason
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_specs_shape_and_dtype(arch, shape_name):
+    cfg = configs.get_config(arch)
+    shape = SHAPES[shape_name]
+    if skip_reason(cfg, shape):
+        pytest.skip("cell skipped by design")
+    specs = input_specs(cfg, shape)
+    leaves = jax.tree.leaves(specs)
+    assert leaves, "no abstract inputs produced"
+    for leaf in leaves:
+        assert isinstance(leaf, jax.ShapeDtypeStruct), type(leaf)
+
+    if shape.kind == "train":
+        toks = specs["batch"]["tokens"]
+        assert toks.dtype == jnp.int32
+        assert toks.shape[0] == shape.global_batch
+        total = toks.shape[1] + (cfg.vision_prefix or 0)
+        assert total == shape.seq_len
+    elif shape.kind == "prefill":
+        assert specs["tokens"].shape[0] == shape.global_batch
+    else:
+        assert specs["tokens"].shape == (shape.global_batch,)
+        assert specs["pos"].shape == (shape.global_batch,)
+        # SWA archs keep an O(window) cache even at 500k positions
+        kv = jax.tree.leaves(specs["state"])
+        biggest = max(l.size * l.dtype.itemsize for l in kv)
+        if cfg.sliding_window and shape.name == "long_500k":
+            assert biggest <= (cfg.num_layers * shape.global_batch
+                               * cfg.sliding_window * cfg.kv_dim * 2 + 10)
+
+
+def test_paper_gemm_shapes_listed():
+    from repro.configs import PAPER_BATCH_SIZES, PAPER_GEMM_SHAPES
+    assert len(PAPER_GEMM_SHAPES) == 8 and len(PAPER_BATCH_SIZES) == 5

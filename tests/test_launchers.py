@@ -1,0 +1,31 @@
+"""CLI driver smokes: train + serve on reduced configs (the example paths)."""
+import jax.numpy as jnp
+
+from repro.launch.serve import main as serve_main
+from repro.launch.train import main as train_main
+
+
+def test_train_cli_reduced(tmp_path):
+    losses = train_main([
+        "--arch", "internvl2-1b", "--reduced", "--steps", "4",
+        "--batch", "2", "--seq", "16",
+        "--ckpt-dir", str(tmp_path), "--ckpt-every", "2",
+    ])
+    assert len(losses) == 4 and all(jnp.isfinite(l) for l in losses)
+
+
+def test_serve_cli_quantized_fused(tmp_path):
+    gen = serve_main([
+        "--arch", "olmoe-1b-7b", "--reduced", "--batch", "2",
+        "--prompt-len", "8", "--gen", "4", "--strategy", "xla",
+    ])
+    assert gen.shape == (2, 4)
+    assert int(gen.min()) >= 0
+
+
+def test_serve_cli_encdec(tmp_path):
+    gen = serve_main([
+        "--arch", "whisper-small", "--reduced", "--batch", "2",
+        "--prompt-len", "8", "--gen", "3", "--strategy", "xla",
+    ])
+    assert gen.shape == (2, 3)

@@ -1,0 +1,160 @@
+"""Per-arch reduced-config smoke tests + serving-path consistency.
+
+Every assigned architecture instantiates its REDUCED config and runs one
+forward + one train step on CPU, asserting output shapes and finiteness.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import layers, transformer as T
+from repro.optim import AdamWConfig, adamw_init
+from repro.runtime import steps as rsteps
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 16
+
+
+def make_batch(cfg, key=KEY, batch=B, seq=S):
+    toks = jax.random.randint(key, (batch, seq), 0, cfg.vocab_size)
+    out = {"tokens": toks, "labels": toks}
+    if cfg.vision_prefix:
+        out["vision_embeds"] = jax.random.normal(
+            key, (batch, cfg.vision_prefix, cfg.d_model), cfg.dtype)
+    if cfg.family == "encdec":
+        out["audio_embeds"] = jax.random.normal(
+            key, (batch, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+    return out
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_arch_smoke_forward_and_train_step(arch):
+    cfg = configs.get_reduced(arch)
+    params = T.init_params(KEY, cfg)
+    batch = make_batch(cfg)
+    logits = T.forward(params, cfg, batch["tokens"],
+                       prefix_embeds=batch.get("vision_embeds"),
+                       audio_embeds=batch.get("audio_embeds"))
+    S_total = S + (cfg.vision_prefix or 0)
+    assert logits.shape == (B, S_total, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    opt_cfg = AdamWConfig(lr=1e-3)
+    settings = rsteps.TrainSettings(microbatches=2)
+    step = jax.jit(rsteps.make_train_step(cfg, opt_cfg, settings))
+    opt = adamw_init(params, opt_cfg)
+    p2, o2, m = step(params, opt,
+                     {"batch": batch, "step": jnp.zeros((), jnp.int32)})
+    assert bool(jnp.isfinite(m["loss"])) and bool(jnp.isfinite(m["grad_norm"]))
+    # params actually moved
+    diff = jax.tree.reduce(
+        lambda a, l: a + float(jnp.abs(l[0] - l[1]).sum()),
+        jax.tree.map(lambda a, b: (a, b), p2, params), 0.0)
+    assert diff > 0.0
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_arch_full_config_exact(arch):
+    """The FULL config matches the assignment table (spot invariants)."""
+    c = configs.get_config(arch)
+    assert c.name == arch
+    table = {
+        "granite-20b": (52, 6144, 48, 1, 24576, 49152),
+        "h2o-danube-1.8b": (24, 2560, 32, 8, 6912, 32000),
+        "starcoder2-7b": (32, 4608, 36, 4, 18432, 49152),
+        "llama3-405b": (126, 16384, 128, 8, 53248, 128256),
+        "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        "rwkv6-7b": (32, 4096, 64, 64, 14336, 65536),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+    }
+    L, d, H, kv, ff, V = table[arch]
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (L, d, H, kv, ff, V)
+    if arch == "mixtral-8x7b":
+        assert (c.num_experts, c.experts_per_token) == (8, 2)
+    if arch == "olmoe-1b-7b":
+        assert (c.num_experts, c.experts_per_token) == (64, 8)
+    if arch == "hymba-1.5b":
+        assert c.ssm_state == 16 and c.family == "hybrid"
+    if arch == "rwkv6-7b":
+        assert c.family == "rwkv"
+    if arch == "whisper-small":
+        assert c.family == "encdec" and c.encoder_layers == 12
+
+
+@pytest.mark.parametrize("arch", ["h2o-danube-1.8b", "rwkv6-7b",
+                                  "hymba-1.5b", "mixtral-8x7b",
+                                  "whisper-small"])
+def test_prefill_decode_matches_forward(arch):
+    """Greedy decode over a prefilled cache reproduces teacher-forced logits."""
+    cfg = configs.get_reduced(arch)
+    if cfg.family == "moe":
+        # dropless routing for the consistency check: capacity dropping is
+        # order-dependent, so teacher-forcing vs decode legitimately diverge
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=100.0)
+    params = T.init_params(KEY, cfg)
+    batch = make_batch(cfg)
+    toks = batch["tokens"]
+    full = T.forward(params, cfg, toks,
+                     audio_embeds=batch.get("audio_embeds"))
+    last, state = T.prefill(params, cfg, toks[:, :S - 1], cache_len=S + 4,
+                            audio_embeds=batch.get("audio_embeds"))
+    np.testing.assert_allclose(np.asarray(last), np.asarray(full[:, S - 2]),
+                               rtol=2e-2, atol=2e-3)
+    logits, _ = T.decode_step(params, cfg, state, toks[:, S - 1],
+                              jnp.full((B,), S - 1, jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full[:, S - 1]),
+                               rtol=2e-2, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ["granite-20b", "olmoe-1b-7b"])
+def test_w4a16_serving_close_to_dense(arch):
+    """W4A16-quantized model (the paper's deployment) tracks the dense model."""
+    cfg = configs.get_reduced(arch)
+    cfg = dataclasses.replace(cfg, w4a16_strategy="xla")
+    params = T.init_params(KEY, cfg)
+    batch = make_batch(cfg)
+    dense = T.forward(params, cfg, batch["tokens"])
+    qparams = layers.quantize_tree(params, group_size=cfg.group_size,
+                                   min_size=0)
+    quant = T.forward(qparams, cfg, batch["tokens"])
+    corr = np.corrcoef(np.asarray(dense, np.float32).ravel(),
+                       np.asarray(quant, np.float32).ravel())[0, 1]
+    assert corr > 0.85, corr
+    # and argmax agreement is high (greedy decode mostly unchanged)
+    agree = np.mean(np.argmax(np.asarray(dense), -1)
+                    == np.argmax(np.asarray(quant), -1))
+    assert agree > 0.5, agree
+
+
+def test_sliding_window_masks_old_tokens():
+    """SWA: token attends only within its window (h2o/mixtral/hymba semantics)."""
+    from repro.models import attention
+    Bq, Sq, H, D = 1, 32, 2, 8
+    q = jax.random.normal(KEY, (Bq, Sq, H, D), jnp.float32)
+    k = jax.random.normal(KEY, (Bq, Sq, H, D), jnp.float32)
+    v = jax.random.normal(KEY, (Bq, Sq, H, D), jnp.float32)
+    full = attention.chunked_attention(q, k, v, causal=True, window=0,
+                                       q_chunk=8, kv_chunk=8)
+    win = attention.chunked_attention(q, k, v, causal=True, window=4,
+                                      q_chunk=8, kv_chunk=8)
+    # early tokens (inside window) identical; late tokens differ
+    np.testing.assert_allclose(np.asarray(win[:, :4]),
+                               np.asarray(full[:, :4]), rtol=1e-5, atol=1e-5)
+    assert float(jnp.abs(win[:, -1] - full[:, -1]).max()) > 1e-4
+
+
+def test_long_context_eligibility_rules():
+    from repro.configs.shapes import SHAPES, skip_reason
+    long = SHAPES["long_500k"]
+    runs = {a for a in configs.ARCHS
+            if skip_reason(configs.get_config(a), long) is None}
+    assert runs == {"h2o-danube-1.8b", "rwkv6-7b", "mixtral-8x7b",
+                    "hymba-1.5b"}

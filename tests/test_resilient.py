@@ -1,0 +1,87 @@
+"""Fault-tolerant runner: retry, checkpoint/restart, elastic re-mesh hook."""
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.resilient import RunnerConfig, run_training
+
+
+def make_setup():
+    params = {"w": jnp.zeros((4,), jnp.float32)}
+    opt = {"m": jnp.zeros((4,), jnp.float32)}
+
+    def train_step(params, opt, inputs):
+        p = {"w": params["w"] + 1.0}
+        return p, opt, {"loss": jnp.sum(p["w"])}
+
+    def batches(step):
+        return {"step": step}
+
+    return params, opt, train_step, batches
+
+
+def test_transient_failures_are_retried(tmp_path):
+    params, opt, step_fn, batches = make_setup()
+    boom = {"left": 2}
+
+    def inject(step, retries):
+        if step == 3 and boom["left"] > 0:
+            boom["left"] -= 1
+            return True
+        return False
+
+    p, o, hist = run_training(
+        cfg=RunnerConfig(ckpt_dir=str(tmp_path), ckpt_every=2, max_retries=3),
+        train_step=step_fn, params=params, opt_state=opt,
+        batches=batches, num_steps=6, inject_failure=inject)
+    kinds = [h[0] for h in hist]
+    assert kinds.count("failure") == 2 and "restart" not in kinds
+    assert float(p["w"][0]) == 6.0            # every step applied exactly once
+
+
+def test_hard_failure_restores_checkpoint_and_remeshes(tmp_path):
+    params, opt, step_fn, batches = make_setup()
+
+    def inject(step, retries):
+        return step == 4          # permanently failing step
+
+    remeshed = {"n": 0}
+
+    def remesh():
+        remeshed["n"] += 1
+
+        def healed_step(params, opt, inputs):   # re-lowered on survivors
+            p = {"w": params["w"] + 1.0}
+            return p, opt, {"loss": jnp.sum(p["w"])}
+        return healed_step
+
+    calls = {"n": 0}
+
+    def inject_once(step, retries):
+        if step == 4 and calls["n"] < 4:
+            calls["n"] += 1
+            return True
+        return False
+
+    p, o, hist = run_training(
+        cfg=RunnerConfig(ckpt_dir=str(tmp_path), ckpt_every=1, max_retries=3),
+        train_step=step_fn, params=params, opt_state=opt,
+        batches=batches, num_steps=8, inject_failure=inject_once,
+        remesh_fn=remesh)
+    kinds = [h[0] for h in hist]
+    assert "restart" in kinds and remeshed["n"] == 1
+    assert float(p["w"][0]) == 8.0            # resumed + completed all steps
+
+
+def test_resume_from_existing_checkpoint(tmp_path):
+    params, opt, step_fn, batches = make_setup()
+    p, o, hist = run_training(
+        cfg=RunnerConfig(ckpt_dir=str(tmp_path), ckpt_every=2),
+        train_step=step_fn, params=params, opt_state=opt,
+        batches=batches, num_steps=5)
+    # fresh process resumes from step 5's checkpoint
+    p2, o2, hist2 = run_training(
+        cfg=RunnerConfig(ckpt_dir=str(tmp_path), ckpt_every=2),
+        train_step=step_fn, params=params, opt_state=opt,
+        batches=batches, num_steps=8)
+    assert hist2[0][0] == "resume"
+    assert float(p2["w"][0]) == 8.0
