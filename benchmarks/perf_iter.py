@@ -43,7 +43,16 @@ def main():
     ap.add_argument("--cfg-set", action="append", default=[],
                     help="ModelConfig override, e.g. remat=false")
     ap.add_argument("--baseline", default="dryrun_records.json")
+    ap.add_argument("--plan-cache", default=None,
+                    help="plan-cache JSON to merge this cell's decisions "
+                         "into (keyed on backend='tpu' / full-config dims — "
+                         "warm-starts TPU serving of the full model, not "
+                         "CPU-reduced demos)")
     args = ap.parse_args()
+
+    from repro.kernels import planning
+    if args.plan_cache and os.path.exists(args.plan_cache):
+        planning.load_plan_cache(args.plan_cache, tolerant=True)
 
     # patch the preset for this run
     st = presets.settings_for(args.arch)
@@ -77,11 +86,42 @@ def main():
                 if (r["arch"], r["shape"], r["mesh"]) == (
                         rec["arch"], rec["shape"], rec["mesh"]):
                     base_row = roofline_row(r) if r["status"] == "OK" else None
+    plans = _cell_plans(planning, args.arch, args.shape)
     print(json.dumps({"overrides": args.set + args.cfg_set,
                       "status": rec["status"],
                       "error": rec.get("error"),
-                      "baseline": base_row, "variant": row},
+                      "baseline": base_row, "variant": row,
+                      "plans": plans},
                      indent=1, default=str))
+    if args.plan_cache:
+        planning.save_plan_cache(args.plan_cache)
+
+
+def _cell_plans(planning, arch, shape_name):
+    """Planner decisions for this cell's quantized serving GEMMs (printed
+    next to the roofline so the hillclimb sees dispatch choices change)."""
+    import jax.numpy as jnp
+    from repro import configs as C
+    from repro.configs.shapes import SHAPES
+
+    cfg = C.get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train" or not cfg.quantize_serve:
+        return None
+    M = shape.global_batch if shape.kind == "decode" \
+        else shape.global_batch * shape.seq_len
+    out = {}
+    for K, N in [(cfg.d_model, cfg.q_dim), (cfg.q_dim, cfg.d_model),
+                 (cfg.d_model, cfg.d_ff), (cfg.d_ff, cfg.d_model)]:
+        g = next((gg for gg in (cfg.group_size, 64, 32) if K % gg == 0), None)
+        if g is None:
+            continue
+        problem = planning.MatmulProblem(
+            M=M, N=N, K=K, group_size=g,
+            act_dtype=str(jnp.dtype(cfg.dtype)),
+            out_dtype=str(jnp.dtype(cfg.dtype)), backend="tpu")
+        out[problem.layer_key] = planning.plan_matmul(problem).to_dict()
+    return out
 
 
 if __name__ == "__main__":

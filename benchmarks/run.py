@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from repro.configs import PAPER_BATCH_SIZES, PAPER_GEMM_SHAPES
 from repro.core import costmodel as cm
 from repro.core.quant import quantize
-from repro.kernels import ops
+from repro.kernels import planning
 from repro.kernels.gemm import gemm
 
 
@@ -85,7 +85,8 @@ def bench_fig3_w4a16_vs_fp16():
 
 def bench_kernel_walltime():
     """Interpret-mode wall time of the actual Pallas kernels on scaled-down
-    paper shapes: fused vs decoupled vs XLA-fused vs native bf16 GEMM."""
+    paper shapes: every registered strategy vs native bf16 GEMM, all through
+    the planned execute path."""
     print("# kernels: name,us_per_call,derived(ratio_vs_xla)")
     key = jax.random.PRNGKey(0)
     for (N, K) in [(512, 4096), (1024, 2048)]:
@@ -93,16 +94,46 @@ def bench_kernel_walltime():
             w = jax.random.normal(key, (K, N), jnp.float32)
             x = jax.random.normal(key, (M, K), jnp.bfloat16)
             qt = quantize(w, group_size=128, out_dtype=jnp.bfloat16)
-            t_xla = _time(lambda: ops.w4a16_matmul(x, qt, strategy="xla"))
+            problem = planning.MatmulProblem.from_operands(x, qt)
+            plans = {s: planning.plan_matmul(problem, strategy=s)
+                     for s in ("xla", "fused", "decoupled")}
+            t_xla = _time(lambda: planning.execute(plans["xla"], x, qt))
             for strat in ("fused", "decoupled"):
-                t = _time(lambda s=strat: ops.w4a16_matmul(
-                    x, qt, strategy=s, interpret=True))
+                t = _time(lambda s=strat: planning.execute(
+                    plans[s], x, qt, interpret=True))
                 print(f"kernels/{strat}/N{N}_K{K}_M{M},{t:.1f},"
                       f"{t / t_xla:.2f}")
             wd = w.astype(jnp.bfloat16)
             t_g = _time(lambda: gemm(x, wd, interpret=True))
             print(f"kernels/gemm_bf16/N{N}_K{K}_M{M},{t_g:.1f},"
                   f"{t_g / t_xla:.2f}")
+
+
+# ---------------------------------------------------------------------------
+# Planner decisions across the paper's GEMM grid
+# ---------------------------------------------------------------------------
+
+def bench_plans():
+    """What the cost-model planner picks per paper (N, K, M) cell, with the
+    predicted cost of every registered strategy next to the winner."""
+    print("# plans: name,us_per_call,derived(strategy/split_k)")
+    for (N, K) in PAPER_GEMM_SHAPES:
+        for M in PAPER_BATCH_SIZES:
+            problem = planning.MatmulProblem(
+                M=M, N=N, K=K, group_size=128, act_dtype="bfloat16",
+                out_dtype="bfloat16", backend="tpu")
+            plan = planning.plan_matmul(problem, use_cache=False)
+            # each strategy costed against ITS OWN plan (split_k etc.) —
+            # the comparison the planner actually ran
+            per = {s: planning.plan_matmul(problem, strategy=s)
+                   for s in planning.available_strategies()}
+            costs = ";".join(
+                f"{s}={planning.get_strategy(s).cost(problem, p) * 1e6:.1f}us"
+                for s, p in per.items())
+            t = planning.get_strategy(plan.strategy).cost(
+                problem, per[plan.strategy])
+            print(f"plans/N{N}_K{K}_M{M},{t*1e6:.2f},"
+                  f"{plan.strategy}/S{plan.split_k}  # {costs}")
 
 
 # ---------------------------------------------------------------------------
@@ -127,6 +158,7 @@ BENCHES = {
     "fig3": bench_fig3_w4a16_vs_fp16,
     "kernels": bench_kernel_walltime,
     "capacity": bench_capacity,
+    "plans": bench_plans,
 }
 
 

@@ -1,4 +1,5 @@
-"""Quickstart: the paper's W4A16 GEMM in five lines, then a quantized layer.
+"""Quickstart: the paper's W4A16 GEMM via the plan-based API, then a
+quantized layer.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -6,7 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quant import quantize, dequantize
-from repro.kernels import ops
+from repro.kernels import planning
 
 key = jax.random.PRNGKey(0)
 
@@ -17,18 +18,31 @@ qt = quantize(w, group_size=128)
 print(f"weight: {w.nbytes/1e6:.1f} MB fp32 -> {qt.nbytes_packed()/1e6:.1f} MB "
       f"packed int4 (+scales)")
 
-# 2. W4A16 matmul: C = A · Dequant(W) (Eq. 2), with strategy dispatch.
+# 2. The primary path: describe the problem, plan it, execute the plan.
 x = jax.random.normal(key, (4, K), jnp.float32)     # small M, like decoding
-for strategy in ("reference", "xla", "fused", "decoupled"):
-    y = ops.w4a16_matmul(x, qt, strategy=strategy)
+problem = planning.MatmulProblem.from_operands(x, qt)
+plan = planning.plan_matmul(problem)                # cost-model planner
+y = planning.execute(plan, x, qt)
+err = float(jnp.abs(y - x @ dequantize(qt)).max())
+print(f"planned: {plan.strategy} split_k={plan.split_k} "
+      f"out={y.shape} max|err|={err:.2e}")
+
+# 3. Any registered strategy can be forced — same execute, no dispatcher.
+for strategy in planning.available_strategies():
+    p = planning.plan_matmul(problem, strategy=strategy)
+    y = planning.execute(p, x, qt, interpret=True)
     err = float(jnp.abs(y - x @ dequantize(qt)).max())
     print(f"  strategy={strategy:10s} out={y.shape} max|err|={err:.2e}")
 
-# 3. The Split-K heuristic picks a split for deep-K decode GEMMs.
-print("chosen split_k for (M=4, N=1024, K=4096):",
-      ops.choose_split_k(4, N, K))
+# 4. Decisions are memoized process-wide and persist to JSON.
+assert planning.plan_matmul(problem) == plan        # cache hit
+n = planning.save_plan_cache("/tmp/repro_quickstart_plans.json")
+print(f"plan cache: {n} plan(s) persisted "
+      f"({planning.PLAN_CACHE.hits} hits / {planning.PLAN_CACHE.misses} "
+      f"misses); split_k for (M=4, N={N}, K={K}):",
+      planning.choose_split_k(4, N, K))
 
-# 4. A quantized model layer end-to-end.
+# 5. A quantized model layer end-to-end (linear() plans internally).
 from repro.models import layers
 
 p = layers.init_linear(key, K, N, jnp.float32)

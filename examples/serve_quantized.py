@@ -2,7 +2,9 @@
 
 Loads a reduced h2o-danube (SWA) model, quantizes every linear to INT4,
 prefills a batch of prompts and decodes greedily — the K≫N small-M GEMM
-regime where the paper's Split-K strategy applies.
+regime where the paper's Split-K strategy applies. The planner chooses the
+kernel per layer ("auto"); its decisions persist to a JSON plan cache that
+later runs (or the train driver) warm-start from.
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -12,5 +14,6 @@ if __name__ == "__main__":
     main([
         "--arch", "h2o-danube-1.8b", "--reduced",
         "--batch", "4", "--prompt-len", "32", "--gen", "12",
-        "--strategy", "fused",
+        "--strategy", "auto",
+        "--plan-cache", "/tmp/repro_plan_cache.json",
     ])

@@ -30,8 +30,13 @@ def run(steps: int):
     from repro.checkpoint import restore_checkpoint
     from repro.optim import AdamWConfig, adamw_init
 
+    # pin every quantized layer to an explicit KernelPlan (the per-config
+    # plan override) instead of re-planning at trace time
+    from repro.kernels import planning
+
     cfg = configs.get_reduced(arch)
-    cfg = dataclasses.replace(cfg, w4a16_strategy="xla")
+    cfg = dataclasses.replace(
+        cfg, w4a16_plan=planning.KernelPlan(strategy="xla"))
     key = jax.random.PRNGKey(0)
     like = {"params": T.init_params(key, cfg),
             "opt": adamw_init(like_params := T.init_params(key, cfg),

@@ -1,0 +1,107 @@
+"""JAX cross-version compatibility shims.
+
+The repo targets the current mesh-context API (``jax.set_mesh``,
+``jax.shard_map``, ``jax.sharding.get_abstract_mesh``) but must also run on
+older jaxlibs (0.4.x) where those live under different names — or don't
+exist and have to be emulated through the internal resource-env plumbing.
+Everything version-sensitive funnels through here so kernels, models, and
+launchers stay on one spelling.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def get_abstract_mesh():
+    """The ambient mesh set by :func:`set_mesh`, or None outside one — also
+    None on jax builds without the AbstractMesh plumbing at all (callers
+    degrade to unsharded execution, never crash)."""
+    try:
+        m = jax.sharding.get_abstract_mesh()
+    except AttributeError:
+        try:
+            from jax._src import mesh as mesh_lib
+
+            m = mesh_lib.get_abstract_mesh()
+        except Exception:
+            return None
+    if m is None or not getattr(m, "axis_names", ()):
+        return None
+    return m
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """``with set_mesh(mesh):`` — ambient-mesh context on any jax version."""
+    if hasattr(jax, "set_mesh"):
+        with jax.set_mesh(mesh):
+            yield mesh
+    elif hasattr(jax.sharding, "use_mesh"):
+        with jax.sharding.use_mesh(mesh):
+            yield mesh
+    else:
+        # 0.4.x: enter the physical resource env (bare-PartitionSpec
+        # with_sharding_constraint) AND the abstract-mesh env (shard_hint /
+        # moe dispatch read it) — together these emulate jax.set_mesh.
+        # Builds without even the internal abstract-mesh plumbing get the
+        # physical env alone (sharding hints degrade to no-ops).
+        try:
+            from jax._src import mesh as mesh_lib
+
+            abstract_ctx = mesh_lib.set_abstract_mesh(mesh.abstract_mesh)
+        except Exception:
+            with mesh:
+                yield mesh
+            return
+        with mesh, abstract_ctx:
+            yield mesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma=None):
+    """``jax.shard_map`` with graceful fallback to the experimental API.
+
+    ``axis_names`` marks the *manual* axes (newer partial-auto spelling);
+    on the old API the complement becomes the ``auto`` set. ``check_vma``
+    maps to the old ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kw = {}
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=bool(check_vma) if check_vma is not None
+                      else True, **kw)
+
+
+def _register_missing_batching_rules() -> None:
+    """0.4.x lacks a vmap rule for ``optimization_barrier`` — the barrier is
+    per-element, so batching is transparent: bind on the batched operands and
+    pass the batch dims through. (Vmapped expert matmuls hit this via the
+    "xla" strategy's dequant pin.)"""
+    try:
+        from jax._src.interpreters import batching
+        from jax._src.lax import lax as lax_internal
+
+        p = lax_internal.optimization_barrier_p
+        if p not in batching.primitive_batchers:
+            def _batcher(args, dims):
+                return p.bind(*args), dims
+
+            batching.primitive_batchers[p] = _batcher
+    except Exception:  # pragma: no cover - internals moved; rule exists
+        pass
+
+
+_register_missing_batching_rules()

@@ -1,29 +1,35 @@
-"""Public jit'd entry points for the W4A16 kernels with strategy dispatch.
+"""Backwards-compatible kernel entry points over the plan-based API.
 
-``w4a16_matmul(x, qt, strategy=...)`` is the framework-facing API every
-quantized layer calls. Strategies:
+``w4a16_matmul(x, qt, strategy=...)`` predates the problem/plan redesign
+and survives as a thin shim: it builds a :class:`~repro.kernels.planning.
+MatmulProblem`, asks the planner for a :class:`~repro.kernels.planning.
+KernelPlan` (forcing the strategy/split_k kwargs when given), and executes.
+New code should use the primary path directly::
 
-  "fused"     — TPU-native in-VMEM dequant (beyond-paper; default on TPU)
+    from repro.kernels import planning
+    problem = planning.MatmulProblem.from_operands(x, qt)
+    y = planning.execute(planning.plan_matmul(problem), x, qt)
+
+Strategies (all registered in planning.py — add more with
+``@register_strategy``, no dispatcher edits needed):
+
+  "fused"     — TPU-native in-VMEM dequant (beyond-paper; wins on TPU)
   "decoupled" — paper-faithful 3-phase Ascend pipeline through HBM
   "reference" — pure-jnp oracle (XLA fuses as it pleases)
   "xla"       — dequantize once via XLA then a single jnp.dot
-  "auto"      — fused, with split_k chosen by the cost-model heuristic
-
-The ``split_k`` heuristic mirrors the paper's finding: split K when the
-output tile count M/m · N/n underfills the cores (K ≫ N, small M — the LLM
-decode regime).
+  "auto"      — cost-model planner ranks every registered strategy
 """
 from __future__ import annotations
 
-import functools
+import dataclasses
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.quant import QuantizedTensor, dequantize
-from repro.kernels import ref
+from repro.core.quant import QuantizedTensor
+from repro.kernels import planning
 from repro.kernels.gemm import gemm
+from repro.kernels.planning import choose_split_k
 from repro.kernels.w4a16_decoupled import (
     dequant_w4,
     reduce_partials,
@@ -37,24 +43,6 @@ __all__ = [
     "dequant_w4", "splitk_gemm", "reduce_partials", "choose_split_k",
 ]
 
-NUM_CORES = 8  # per-chip parallel-unit proxy (v5e TensorCores × futures)
-
-
-def choose_split_k(M: int, N: int, K: int, *, group_size: int = 128,
-                   block_m: int = 128, block_n: int = 256) -> int:
-    """Paper-informed Split-K heuristic: split when output tiles underfill
-    the chip and K is deep (K ≫ N — decode GEMMs)."""
-    m_tiles = max(1, -(-M // block_m))
-    n_tiles = max(1, -(-N // block_n))
-    tiles = m_tiles * n_tiles
-    if tiles >= NUM_CORES or K < 2 * group_size:
-        return 1
-    want = min(NUM_CORES // tiles, K // group_size)
-    s = 1
-    while s * 2 <= want and K % (s * 2) == 0 and (K // (s * 2)) % group_size == 0:
-        s *= 2
-    return s
-
 
 def w4a16_matmul(
     x: jax.Array,
@@ -66,55 +54,23 @@ def w4a16_matmul(
     out_dtype=None,
     interpret=None,
 ) -> jax.Array:
-    """C = x · Dequant(W). x may have arbitrary leading dims; contracts last."""
-    out_dtype = out_dtype or x.dtype
-    lead = x.shape[:-1]
-    K = x.shape[-1]
-    x2 = x.reshape(-1, K)
-    M = x2.shape[0]
+    """C = x · Dequant(W). x may have arbitrary leading dims; contracts last.
 
+    Compatibility shim: "auto" defers to the planner (split_k heuristic,
+    plan cache); a named strategy is forced with split_k defaulting to 1
+    exactly as the old dispatcher did; ``autotune=True`` maps to the
+    planner's refine pass (tile search).
+    """
+    problem = planning.MatmulProblem.from_operands(
+        x, qt, out_dtype=out_dtype or x.dtype)
     if strategy == "auto":
-        # the Pallas kernel is the TPU deployment path (per-shard under
-        # shard_map); on CPU hosts "auto" resolves to the XLA formulation —
-        # interpret-mode kernels inside a large jit graph would execute the
-        # grid as a Python-level loop
-        strategy = "fused" if jax.default_backend() == "tpu" else "xla"
-        if split_k is None:
-            split_k = choose_split_k(M, qt.N, K, group_size=qt.group_size)
-    if split_k is None:
-        split_k = 1
-
-    if strategy == "reference":
-        out = ref.w4a16_ref(x2, qt, out_dtype=out_dtype)
-    elif strategy == "xla":
-        # barrier pins dequantization INSIDE the enclosing (layer) loop:
-        # without it XLA's loop-invariant code motion hoists Dequant(W) for
-        # every scanned layer out of the decode loop and materializes the
-        # whole model in bf16 — silently undoing W4A16's 4× memory win
-        packed, scales = jax.lax.optimization_barrier((qt.packed, qt.scales))
-        from repro.core.quant import QuantizedTensor
-        qt_pinned = QuantizedTensor(packed, scales, qt.zeros,
-                                    qt.group_size, qt.out_dtype)
-        w = dequantize(qt_pinned)
-        out = jnp.dot(
-            x2.astype(w.dtype), w, preferred_element_type=jnp.float32
-        ).astype(out_dtype)
-    elif strategy == "fused":
-        if autotune:
-            from repro.kernels.autotune import autotune_w4a16
-            bm, bn, bk, s = autotune_w4a16(M, qt.N, K, group=qt.group_size)
-            out = w4a16_fused(
-                x2, qt, split_k=s, block_m=bm, block_n=bn, block_k=bk,
-                out_dtype=out_dtype, interpret=interpret)
-        else:
-            out = w4a16_fused(
-                x2, qt, split_k=split_k, out_dtype=out_dtype,
-                interpret=interpret)
-    elif strategy == "decoupled":
-        out = w4a16_decoupled(
-            x2, qt, split_k=max(split_k, 1), out_dtype=out_dtype,
-            interpret=interpret,
-        )
+        plan = planning.plan_matmul(problem, refine=autotune)
+        if split_k is not None:
+            plan = dataclasses.replace(plan, split_k=split_k)
     else:
-        raise ValueError(f"unknown strategy {strategy!r}")
-    return out.reshape(*lead, qt.N)
+        plan = planning.plan_matmul(problem, strategy=strategy,
+                                    refine=autotune)
+        if not autotune:
+            plan = dataclasses.replace(
+                plan, split_k=1 if split_k is None else split_k)
+    return planning.execute(plan, x, qt, interpret=interpret)

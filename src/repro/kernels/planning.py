@@ -1,0 +1,567 @@
+"""Plan-based W4A16 matmul API: problem → plan → execute.
+
+The paper's central finding is that W4A16 wins or loses on *dispatch
+decisions* — Split-K degree, tile shapes, and whether the dequant
+round-trips through global memory. This module makes those decisions
+first-class objects instead of string branches and scattered kwargs:
+
+  :class:`MatmulProblem`  — a hashable description of one GEMM
+                            (shapes, dtypes, quantization, backend).
+  :class:`KernelPlan`     — a serializable dispatch decision
+                            (strategy + split_k + tile shape).
+  registry                — ``@register_strategy("name")`` makes a strategy
+                            pluggable; the planner ranks whatever is
+                            registered by its cost model, so adding a
+                            backend never edits a dispatcher.
+  :func:`plan_matmul`     — cost-model planner folding the Split-K
+                            occupancy heuristic and the roofline models of
+                            ``core/costmodel.py`` into one ranked decision,
+                            memoized in a JSON-persistent plan cache.
+  :func:`execute`         — run a plan on concrete operands.
+
+Primary path (what every in-repo call site uses)::
+
+    problem = MatmulProblem.from_operands(x, qt)
+    y = execute(plan_matmul(problem), x, qt)
+
+``ops.w4a16_matmul(x, qt, strategy=...)`` remains as a thin
+backwards-compatible shim over this module. See docs/api.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import math
+import threading
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compat  # noqa: F401  (registers vmap rules "xla" needs)
+from repro.core import costmodel
+from repro.core.quant import QuantizedTensor, dequantize
+from repro.kernels import ref
+from repro.kernels.w4a16_decoupled import w4a16_decoupled
+from repro.kernels.w4a16_fused import w4a16_fused
+
+__all__ = [
+    "MatmulProblem", "KernelPlan", "Strategy",
+    "register_strategy", "get_strategy", "available_strategies",
+    "plan_matmul", "resolve_plan", "execute",
+    "PlanCache", "PLAN_CACHE", "load_plan_cache", "save_plan_cache",
+    "choose_split_k", "num_cores",
+]
+
+
+# ---------------------------------------------------------------------------
+# Problem
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MatmulProblem:
+    """One W4A16 GEMM: C[M, N] = A[M, K] · Dequant(W[K, N]).
+
+    Hashable and order-insensitive — the plan cache and the planner key on
+    this. ``batch`` counts independent GEMMs sharing the plan (vmapped
+    expert stacks); ``M`` is rows per GEMM.
+    """
+
+    M: int
+    N: int
+    K: int
+    group_size: int = 128
+    act_dtype: str = "bfloat16"
+    out_dtype: str = "bfloat16"
+    has_zeros: bool = False
+    backend: str = "cpu"
+    batch: int = 1
+
+    @classmethod
+    def from_operands(cls, x: jax.Array, qt: QuantizedTensor, *,
+                      out_dtype=None, backend: Optional[str] = None,
+                      batch: int = 1) -> "MatmulProblem":
+        """Describe ``x @ Dequant(qt)``; x may have arbitrary leading dims."""
+        K = x.shape[-1]
+        M = math.prod(x.shape[:-1]) if x.ndim > 1 else 1
+        return cls(
+            M=int(M), N=int(qt.N), K=int(K),
+            group_size=int(qt.group_size),
+            act_dtype=str(jnp.dtype(x.dtype)),
+            out_dtype=str(jnp.dtype(out_dtype or x.dtype)),
+            has_zeros=qt.zeros is not None,
+            backend=backend or jax.default_backend(),
+            batch=batch,
+        )
+
+    @property
+    def layer_key(self) -> str:
+        """Weight-shape key ("KxN") — one entry per model layer."""
+        return f"{self.K}x{self.N}"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "MatmulProblem":
+        return cls(**dict(d))
+
+
+# ---------------------------------------------------------------------------
+# Plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KernelPlan:
+    """A dispatch decision: which strategy, how to split K, which tiles.
+
+    ``out_dtype`` of None means "the activation dtype at execute time".
+    JSON round-trips exactly (see to_json/from_json).
+    """
+
+    strategy: str
+    split_k: int = 1
+    block_m: int = 128
+    block_n: int = 256
+    block_k: int = 512
+    out_dtype: Optional[str] = None
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "KernelPlan":
+        return cls(**dict(d))
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "KernelPlan":
+        return cls.from_dict(json.loads(s))
+
+
+# ---------------------------------------------------------------------------
+# Strategy registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    """A pluggable execution strategy.
+
+    execute(x2, qt, plan, interpret=None) -> (M, N) array, x2 always 2-D.
+    cost(problem, plan) -> estimated seconds (planner ranking).
+    supports(problem) -> eligibility gate.
+    """
+
+    name: str
+    execute: Callable[..., jax.Array]
+    cost: Callable[[MatmulProblem, KernelPlan], float]
+    supports: Callable[[MatmulProblem], bool]
+
+
+_REGISTRY: Dict[str, Strategy] = {}
+
+
+def register_strategy(name: str, *, cost=None, supports=None):
+    """Register an execute fn under ``name``; the planner picks it up with
+    no dispatcher edits. ``cost`` defaults to +inf (never auto-chosen,
+    still explicitly runnable); ``supports`` defaults to always-eligible."""
+
+    def deco(fn):
+        _REGISTRY[name] = Strategy(
+            name=name,
+            execute=fn,
+            cost=cost or (lambda problem, plan: float("inf")),
+            supports=supports or (lambda problem: True),
+        )
+        return fn
+
+    return deco
+
+
+def get_strategy(name: str) -> Strategy:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown strategy {name!r}; registered: {available_strategies()}"
+        ) from None
+
+
+def available_strategies() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# Split-K heuristic (paper Fig. 2) and core counting
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=1)
+def num_cores() -> int:
+    """Parallel-unit count for the occupancy heuristic: on TPU, the local
+    chips × 2 TensorCores (megacore); elsewhere the paper-model default of
+    8 — a CPU host is modeling the target chip, not itself."""
+    try:
+        dev = jax.local_devices()[0]
+        if dev.platform == "tpu":
+            return max(1, jax.local_device_count() * 2)
+    except Exception:  # pragma: no cover - no devices during docs builds
+        pass
+    return 8
+
+
+def choose_split_k(M: int, N: int, K: int, *, group_size: int = 128,
+                   block_m: int = 128, block_n: int = 256) -> int:
+    """Paper-informed Split-K heuristic: split when output tiles underfill
+    the chip and K is deep (K ≫ N — decode GEMMs)."""
+    if group_size <= 0 or K % group_size:
+        return 1          # K-slices could not stay group-aligned
+    cores = num_cores()
+    m_tiles = max(1, -(-M // block_m))
+    n_tiles = max(1, -(-N // block_n))
+    tiles = m_tiles * n_tiles
+    if tiles >= cores or K < 2 * group_size:
+        return 1
+    want = min(cores // tiles, K // group_size)
+    s = 1
+    while s * 2 <= want and K % (s * 2) == 0 and (K // (s * 2)) % group_size == 0:
+        s *= 2
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Cost models (seconds; lower wins). Pallas strategies pay a large factor
+# off-TPU: interpret mode executes the grid as a Python loop, so the
+# planner must never auto-pick them on a CPU host.
+# ---------------------------------------------------------------------------
+
+_INTERPRET_PENALTY = 1e4
+
+
+def _pallas_factor(problem: MatmulProblem) -> float:
+    return 1.0 if problem.backend == "tpu" else _INTERPRET_PENALTY
+
+
+def _cost_fused(problem: MatmulProblem, plan: KernelPlan) -> float:
+    return (costmodel.w4a16_time_tpu_fused(problem.M, problem.N, problem.K)
+            * problem.batch * _pallas_factor(problem))
+
+
+def _cost_decoupled(problem: MatmulProblem, plan: KernelPlan) -> float:
+    return (costmodel.w4a16_time_tpu_decoupled(
+        problem.M, problem.N, problem.K, split_k=max(plan.split_k, 1))
+        * problem.batch * _pallas_factor(problem))
+
+
+def _cost_xla(problem: MatmulProblem, plan: KernelPlan) -> float:
+    """Dequant materialized once by XLA (int4 read + float write) + GEMM."""
+    M, N, K = problem.M, problem.N, problem.K
+    spec = costmodel.TPU_V5E
+    t_deq = (0.5 * K * N + 2 * K * N) / spec.hbm_bw
+    t_mm = max((2 * M * N * K) / spec.flops,
+               (2 * M * K + 2 * K * N + 2 * M * N) / spec.hbm_bw)
+    return (t_deq + t_mm) * problem.batch
+
+
+def _cost_reference(problem: MatmulProblem, plan: KernelPlan) -> float:
+    # same math as "xla" but without the loop-invariance barrier — XLA may
+    # hoist the dequant and re-materialize the model in bf16; keep it as a
+    # correctness oracle, never the planner's pick
+    return _cost_xla(problem, plan) * 1.25
+
+
+def _supports_pallas(problem: MatmulProblem) -> bool:
+    # the kernels pad M and re-pick blocks, but K must be packable/grouped
+    return problem.K % 2 == 0 and problem.K % problem.group_size == 0
+
+
+# ---------------------------------------------------------------------------
+# Registered strategies. "decoupled" (the paper-faithful pipeline) plugs in
+# through the same decorator as everything else — the acceptance demo that
+# a strategy needs no dispatcher edits.
+# ---------------------------------------------------------------------------
+
+def _exec_out_dtype(plan: KernelPlan, x: jax.Array):
+    return jnp.dtype(plan.out_dtype) if plan.out_dtype else x.dtype
+
+
+@register_strategy("reference", cost=_cost_reference)
+def _run_reference(x2, qt, plan, *, interpret=None):
+    return ref.w4a16_ref(x2, qt, out_dtype=_exec_out_dtype(plan, x2))
+
+
+@register_strategy("xla", cost=_cost_xla)
+def _run_xla(x2, qt, plan, *, interpret=None):
+    # barrier pins dequantization INSIDE the enclosing (layer) loop:
+    # without it XLA's loop-invariant code motion hoists Dequant(W) for
+    # every scanned layer out of the decode loop and materializes the
+    # whole model in bf16 — silently undoing W4A16's 4× memory win
+    pinned = jax.lax.optimization_barrier(
+        (qt.packed, qt.scales) + (() if qt.zeros is None else (qt.zeros,)))
+    packed, scales = pinned[0], pinned[1]
+    zeros = pinned[2] if qt.zeros is not None else None
+    w = dequantize(QuantizedTensor(packed, scales, zeros,
+                                   qt.group_size, qt.out_dtype))
+    return jnp.dot(
+        x2.astype(w.dtype), w, preferred_element_type=jnp.float32
+    ).astype(_exec_out_dtype(plan, x2))
+
+
+@register_strategy("fused", cost=_cost_fused, supports=_supports_pallas)
+def _run_fused(x2, qt, plan, *, interpret=None):
+    return w4a16_fused(
+        x2, qt, split_k=max(plan.split_k, 1),
+        block_m=plan.block_m, block_n=plan.block_n, block_k=plan.block_k,
+        out_dtype=_exec_out_dtype(plan, x2), interpret=interpret)
+
+
+@register_strategy("decoupled", cost=_cost_decoupled,
+                   supports=_supports_pallas)
+def _run_decoupled(x2, qt, plan, *, interpret=None):
+    return w4a16_decoupled(
+        x2, qt, split_k=max(plan.split_k, 1),
+        block_m=plan.block_m, block_n=plan.block_n, block_k=plan.block_k,
+        out_dtype=_exec_out_dtype(plan, x2), interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Plan cache (process-wide, JSON-persistent)
+# ---------------------------------------------------------------------------
+
+class PlanCache:
+    """Problem → plan memo with hit/miss stats and JSON persistence.
+
+    Only planner-chosen (strategy-unforced) plans are cached; forced or
+    overridden plans are cheap to rebuild and would poison lookups.
+    """
+
+    _VERSION = 1
+
+    def __init__(self) -> None:
+        self._plans: Dict[MatmulProblem, KernelPlan] = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def get(self, problem: MatmulProblem) -> Optional[KernelPlan]:
+        with self._lock:
+            plan = self._plans.get(problem)
+            if plan is None:
+                self.misses += 1
+            else:
+                self.hits += 1
+            return plan
+
+    def put(self, problem: MatmulProblem, plan: KernelPlan) -> None:
+        with self._lock:
+            self._plans[problem] = plan
+
+    def clear(self) -> None:
+        with self._lock:
+            self._plans.clear()
+            self.hits = self.misses = 0
+
+    def save(self, path: str) -> int:
+        """Persist every cached decision; returns the entry count."""
+        with self._lock:
+            entries = [{"problem": prob.to_dict(), "plan": plan.to_dict()}
+                       for prob, plan in self._plans.items()]
+        with open(path, "w") as f:
+            json.dump({"version": self._VERSION, "plans": entries},
+                      f, indent=1, sort_keys=True)
+        return len(entries)
+
+    def load(self, path: str, *, merge: bool = True) -> int:
+        """Load persisted decisions (merging over the current contents by
+        default); returns the number of entries loaded. Any malformed
+        content raises ValueError (never TypeError/AttributeError), so
+        callers can guard with one exception type."""
+        with open(path) as f:
+            blob = json.load(f)      # JSONDecodeError is a ValueError
+        try:
+            if blob.get("version") != self._VERSION:
+                raise ValueError(
+                    f"unsupported plan-cache version in {path}: "
+                    f"{blob.get('version')!r}")
+            loaded = {MatmulProblem.from_dict(e["problem"]):
+                      KernelPlan.from_dict(e["plan"]) for e in blob["plans"]}
+        except (TypeError, AttributeError, KeyError) as e:
+            raise ValueError(f"malformed plan cache {path}: {e}") from e
+        # a cache written by a build with extra strategies must not smuggle
+        # un-executable plans past tolerant loading: keep only entries this
+        # process can actually dispatch
+        loaded = {prob: plan for prob, plan in loaded.items()
+                  if plan.strategy in _REGISTRY}
+        with self._lock:
+            if not merge:
+                self._plans.clear()
+            self._plans.update(loaded)
+        return len(loaded)
+
+
+PLAN_CACHE = PlanCache()
+
+
+def load_plan_cache(path: str, *, merge: bool = True,
+                    tolerant: bool = False) -> int:
+    """Load ``path`` into the process cache. With ``tolerant=True`` a
+    missing or unreadable file is a no-op returning -1 — launchers warm-
+    starting from an optional cache must never die on a stale file."""
+    try:
+        return PLAN_CACHE.load(path, merge=merge)
+    except (OSError, ValueError):
+        if tolerant:
+            return -1
+        raise
+
+
+def save_plan_cache(path: str) -> int:
+    return PLAN_CACHE.save(path)
+
+
+# ---------------------------------------------------------------------------
+# Planner
+# ---------------------------------------------------------------------------
+
+def _default_plan(problem: MatmulProblem, strategy: str,
+                  refine: bool) -> KernelPlan:
+    """Heuristic (or refined) plan parameters for one strategy."""
+    split_k = 1
+    block_m, block_n, block_k = 128, 256, 512
+    if strategy in ("fused", "decoupled"):
+        split_k = choose_split_k(problem.M, problem.N, problem.K,
+                                 group_size=problem.group_size)
+        if refine:
+            # the former autotune.py search, now the planner's optional
+            # measurement/refinement pass: rank tile candidates under the
+            # VMEM budget with the v5e roofline
+            from repro.kernels.autotune import autotune_w4a16
+
+            block_m, block_n, block_k, split_k = autotune_w4a16(
+                problem.M, problem.N, problem.K, group=problem.group_size)
+    return KernelPlan(strategy=strategy, split_k=split_k, block_m=block_m,
+                      block_n=block_n, block_k=block_k,
+                      out_dtype=problem.out_dtype)
+
+
+def plan_matmul(problem: MatmulProblem, *, strategy: Optional[str] = None,
+                refine: bool = False, use_cache: bool = True,
+                cache: Optional[PlanCache] = None) -> KernelPlan:
+    """Choose a :class:`KernelPlan` for ``problem``.
+
+    With ``strategy=None`` every registered, eligible strategy is ranked by
+    its cost model and the cheapest wins; the decision is memoized in the
+    plan cache (process-wide, JSON-persistable). A named ``strategy`` forces
+    the choice but still fills split_k/tiles heuristically. ``refine=True``
+    additionally runs the tile-search refinement (ex-autotune) for Pallas
+    strategies.
+    """
+    if strategy is not None:
+        return _default_plan(problem, get_strategy(strategy).name, refine)
+
+    cache = cache if cache is not None else PLAN_CACHE
+    if use_cache and not refine:
+        # a refine request must reach the tile search even when a heuristic
+        # plan is already cached; the refined plan then overwrites it
+        hit = cache.get(problem)
+        if hit is not None:
+            return hit
+
+    best: Optional[Tuple[float, int, KernelPlan]] = None
+    for order, strat in enumerate(_REGISTRY.values()):
+        if not strat.supports(problem):
+            continue
+        plan = _default_plan(problem, strat.name, refine)
+        score = strat.cost(problem, plan)
+        if best is None or (score, order) < (best[0], best[1]):
+            best = (score, order, plan)
+    if best is None:
+        # nothing eligible (e.g. odd K): the pure-jnp oracle always works
+        best = (float("inf"), -1, _default_plan(problem, "reference", False))
+    plan = best[2]
+    if use_cache:
+        cache.put(problem, plan)
+    return plan
+
+
+def resolve_plan(problem: MatmulProblem, cfg=None) -> KernelPlan:
+    """Plan for a model-layer matmul, honoring config overrides.
+
+    ``cfg.w4a16_plan`` may be a :class:`KernelPlan` (applies to every
+    quantized layer), a mapping from layer key ``"KxN"`` to a plan/dict
+    (per-layer override), or None. Otherwise ``cfg.w4a16_strategy`` forces
+    the strategy ("auto" defers fully to the planner).
+    """
+    override = getattr(cfg, "w4a16_plan", None) if cfg is not None else None
+    if override is not None:
+        if isinstance(override, KernelPlan):
+            return override
+        if isinstance(override, Mapping):
+            hit = override.get(problem.layer_key)
+            if hit is not None:
+                return hit if isinstance(hit, KernelPlan) \
+                    else KernelPlan.from_dict(hit)
+        elif isinstance(override, str):
+            return KernelPlan.from_json(override)
+    strategy = getattr(cfg, "w4a16_strategy", "auto") if cfg is not None \
+        else "auto"
+    if strategy and strategy != "auto":
+        return plan_matmul(problem, strategy=strategy)
+    return plan_matmul(problem)
+
+
+# ---------------------------------------------------------------------------
+# Execution
+# ---------------------------------------------------------------------------
+
+def execute(plan: KernelPlan, x: jax.Array, qt: QuantizedTensor, *,
+            interpret=None) -> jax.Array:
+    """Run a planned W4A16 matmul: x (..., K) → (..., N)."""
+    strat = get_strategy(plan.strategy)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    out = strat.execute(x2, qt, plan, interpret=interpret)
+    return out.reshape(*lead, qt.N)
+
+
+def matmul(x: jax.Array, qt: QuantizedTensor, *, cfg=None,
+           interpret=None) -> jax.Array:
+    """One-call convenience over the primary path (plan cache included)."""
+    problem = MatmulProblem.from_operands(x, qt)
+    return execute(resolve_plan(problem, cfg), x, qt, interpret=interpret)
+
+
+def plan_for_params(params, M: int, *, refine: bool = False,
+                    backend: Optional[str] = None) -> Dict[str, KernelPlan]:
+    """Pre-plan every quantized layer GEMM in a param pytree for ``M`` rows.
+
+    Returns ``{layer_key ("KxN"): plan}``; every decision lands in the
+    process plan cache, so subsequent layer-time lookups (same M/dtypes)
+    are hits. ``refine=True`` runs the tile-search refinement per layer —
+    the launcher-facing replacement for the old per-call autotune kwarg.
+    """
+    plans: Dict[str, KernelPlan] = {}
+    leaves = jax.tree_util.tree_leaves(
+        params, is_leaf=lambda t: isinstance(t, QuantizedTensor))
+    for leaf in leaves:
+        if not isinstance(leaf, QuantizedTensor):
+            continue
+        K = int(leaf.packed.shape[-2]) * 2
+        N = int(leaf.packed.shape[-1])
+        # batch=1, matching the layer-time lookup key: stacked (L, ...)
+        # kernels execute as 2-D slices inside scan, so from_operands
+        # builds batch=1 problems there — and batch scales every cost
+        # uniformly, so the decision is stack-size-invariant anyway
+        problem = MatmulProblem(
+            M=int(M), N=N, K=K, group_size=leaf.group_size,
+            act_dtype=str(jnp.dtype(leaf.out_dtype)),
+            out_dtype=str(jnp.dtype(leaf.out_dtype)),
+            has_zeros=leaf.zeros is not None,
+            backend=backend or jax.default_backend())
+        plans[problem.layer_key] = plan_matmul(problem, refine=refine)
+    return plans

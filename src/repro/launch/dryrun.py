@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
+from repro.core import compat
 from repro.configs import SHAPES, input_specs, skip_reason, cache_len_for
 from repro.launch.mesh import make_production_mesh
 from repro.launch.presets import settings_for
@@ -340,7 +341,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         opt_abs = _abstract_opt_state(params_abs, opt_cfg)
         inputs_abs = {"batch": specs["batch"],
                       "step": jax.ShapeDtypeStruct((), jnp.int32)}
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             fn = rsteps.jit_train_step(cfg, mesh, settings, params_abs,
                                        inputs_abs, opt_cfg)
             lowered = fn.lower(params_abs, opt_abs, inputs_abs)
@@ -353,14 +354,14 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             lambda p: T.quantize_params(p, scfg), params_abs)
 
     if shape.kind == "prefill":
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             fn = rsteps.jit_prefill_step(
                 scfg, mesh, cache_len_for(scfg, shape), params_abs, specs,
                 fsdp_serve=settings.fsdp_serve)
             lowered = fn.lower(params_abs, specs)
         return lowered, {"mesh": mesh, "kind": "prefill"}
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         fn = rsteps.jit_serve_step(scfg, mesh, params_abs, specs,
                                    fsdp_serve=settings.fsdp_serve)
         lowered = fn.lower(params_abs, specs)

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 import time
 
 import jax
@@ -17,6 +18,7 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.configs.shapes import cache_len_for, ShapeSpec
+from repro.kernels import planning
 from repro.models import layers, transformer as T
 from repro.runtime import steps as rsteps
 
@@ -28,10 +30,24 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--strategy", default="xla",
-                    choices=["xla", "fused", "decoupled", "reference"])
+    ap.add_argument("--strategy", default="auto",
+                    choices=["auto"] + list(planning.available_strategies()))
+    ap.add_argument("--plan-cache", default=None,
+                    help="plan-cache JSON: loaded before serving if present, "
+                         "saved (with any new decisions) afterwards")
+    ap.add_argument("--refine-plans", action="store_true",
+                    help="run the planner's tile-search refinement pass")
     ap.add_argument("--no-quant", action="store_true")
     args = ap.parse_args(argv)
+
+    if args.plan_cache and os.path.exists(args.plan_cache):
+        n = planning.load_plan_cache(args.plan_cache, tolerant=True)
+        if n >= 0:
+            print(f"[serve] plan cache: loaded {n} plans "
+                  f"from {args.plan_cache}")
+        else:
+            print(f"[serve] plan cache {args.plan_cache} unreadable; "
+                  f"replanning from scratch")
 
     cfg = (configs.get_reduced if args.reduced else configs.get_config)(
         args.arch)
@@ -47,6 +63,15 @@ def main(argv=None):
                 params, is_leaf=lambda t: hasattr(t, "nbytes_packed")))
         print(f"[serve] {cfg.name} W4A16 ({args.strategy}); "
               f"weights {qbytes/1e6:.1f} MB on disk")
+        if args.strategy == "auto":
+            # pre-plan the decode-regime (M=batch) GEMMs: the planner's
+            # decisions land in the plan cache before the first trace
+            plans = planning.plan_for_params(params, M=args.batch,
+                                             refine=args.refine_plans)
+            for lk, plan in sorted(plans.items()):
+                print(f"[serve]   plan {lk}: {plan.strategy} "
+                      f"split_k={plan.split_k} "
+                      f"tiles=({plan.block_m},{plan.block_n},{plan.block_k})")
 
     B, P, G = args.batch, args.prompt_len, args.gen
     cache_len = min(P + G, cache_len_for(
@@ -83,6 +108,11 @@ def main(argv=None):
     print(f"[serve] prefill {P} toks: {t_prefill*1e3:.1f} ms; "
           f"decode {G-1} steps: {t_dec/(max(G-1,1))*1e3:.2f} ms/tok")
     print(f"[serve] sample generation (batch 0): {gen[0].tolist()}")
+    if args.plan_cache:
+        n = planning.save_plan_cache(args.plan_cache)
+        c = planning.PLAN_CACHE
+        print(f"[serve] plan cache: {n} plans -> {args.plan_cache} "
+              f"({c.hits} hits / {c.misses} misses this run)")
     return gen
 
 

@@ -9,6 +9,7 @@ the same code path end-to-end on local devices.
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -16,8 +17,9 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.data import SyntheticTokenStream
+from repro.kernels import planning
 from repro.launch.presets import settings_for
-from repro.models import transformer as T
+from repro.models import layers, transformer as T
 from repro.optim import AdamWConfig, adamw_init
 from repro.runtime import steps as rsteps
 from repro.runtime.resilient import RunnerConfig, run_training
@@ -44,7 +46,16 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--plan-cache", default=None,
+                    help="plan-cache JSON: pre-plan this model's W4A16 "
+                         "serving GEMMs after training and persist them, so "
+                         "the serve launcher starts with warm plans")
     args = ap.parse_args(argv)
+
+    if args.plan_cache and os.path.exists(args.plan_cache):
+        if planning.load_plan_cache(args.plan_cache, tolerant=True) < 0:
+            print(f"[train] plan cache {args.plan_cache} unreadable; "
+                  f"replanning from scratch")
 
     cfg = (configs.get_reduced if args.reduced else configs.get_config)(
         args.arch)
@@ -84,6 +95,16 @@ def main(argv=None):
     print(f"[train] done {args.steps} steps in {dt:.1f}s; "
           f"loss {losses[0]:.4f} -> {losses[-1]:.4f}; "
           f"events: {[h[0] for h in history]}")
+    if args.plan_cache:
+        # quantize a throwaway copy of the trained tree to enumerate the
+        # serving GEMMs, plan them at decode batch M, and persist — the
+        # train→quantize→serve pipeline starts serving with warm plans
+        qparams = layers.quantize_tree(params, group_size=cfg.group_size,
+                                       min_size=0)
+        plans = planning.plan_for_params(qparams, M=args.batch)
+        n = planning.save_plan_cache(args.plan_cache)
+        print(f"[train] plan cache: {len(plans)} layer GEMMs planned, "
+              f"{n} plans -> {args.plan_cache}")
     return losses
 
 

@@ -42,7 +42,13 @@ class ModelConfig:
     # W4A16 serving (the paper's technique, first-class)
     quantize_serve: bool = True
     group_size: int = 128
-    w4a16_strategy: str = "auto"     # auto | fused | decoupled | xla | reference
+    w4a16_strategy: str = "auto"     # "auto" = cost-model planner; or any
+                                     # name in planning.available_strategies()
+    w4a16_plan: Any = None           # explicit KernelPlan override: a
+                                     # planning.KernelPlan (all layers), a
+                                     # {"KxN": plan} mapping (per layer), or
+                                     # a KernelPlan JSON string; None = plan
+                                     # via w4a16_strategy
 
     # training
     remat: bool = True

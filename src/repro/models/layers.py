@@ -13,8 +13,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import compat
 from repro.core.quant import QuantizedTensor, quantize
-from repro.kernels import ops
+from repro.kernels import planning
 
 
 # ---------------------------------------------------------------------------
@@ -29,11 +30,8 @@ def shard_hint(x: jax.Array, kind: str) -> jax.Array:
     kinds: "bsd" (B,S,d) · "bshd" (B,S,H,D) · "bd" (B,d) · "bhd" (B,H,D)
          · "ecd" (E,cap,d) MoE dispatch buffers — capacity dim over DP axes
     """
-    try:
-        mesh = jax.sharding.get_abstract_mesh()
-    except Exception:  # pragma: no cover
-        return x
-    if mesh is None or not mesh.axis_names:
+    mesh = compat.get_abstract_mesh()
+    if mesh is None:
         return x
     names = mesh.axis_names
     dp = tuple(a for a in ("pod", "data") if a in names)
@@ -80,8 +78,7 @@ def linear(p, x: jax.Array, cfg=None) -> jax.Array:
     """y = x @ W (+ b); W may be dense or a QuantizedTensor (W4A16)."""
     w = p["kernel"]
     if isinstance(w, QuantizedTensor):
-        strategy = getattr(cfg, "w4a16_strategy", "auto") if cfg is not None else "auto"
-        y = ops.w4a16_matmul(x, w, strategy=strategy, out_dtype=x.dtype)
+        y = planning.matmul(x, w, cfg=cfg)
     elif cfg is not None and getattr(cfg, "bf16_partials", False):
         # cross-shard partial sums in activation dtype (bf16): the GSPMD
         # all-reduce of row-parallel outputs moves half the bytes

@@ -24,6 +24,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import compat
+from repro.kernels import planning
 from repro.models import layers
 
 
@@ -44,21 +46,25 @@ def _expert_matmul(w, x, cfg):
     """x: (E, Cap, K) · w: (E, K, N) — dense or per-expert W4A16."""
     kern = w["kernel"]
     if isinstance(kern, layers.QuantizedTensor):
-        strategy = getattr(cfg, "w4a16_strategy", "auto") if cfg is not None else "auto"
-        f = lambda xe, qe: layers.ops.w4a16_matmul(
-            xe, qe, strategy=strategy, out_dtype=xe.dtype)
-        return jax.vmap(f)(x, kern)
+        # one plan for the whole expert stack (all E GEMMs share shapes),
+        # then vmap the planned execute over experts
+        problem = planning.MatmulProblem(
+            M=int(x.shape[1]), N=int(kern.packed.shape[-1]),
+            K=int(x.shape[-1]), group_size=kern.group_size,
+            act_dtype=str(jnp.dtype(x.dtype)),
+            out_dtype=str(jnp.dtype(x.dtype)),
+            has_zeros=kern.zeros is not None,
+            backend=jax.default_backend(), batch=int(x.shape[0]))
+        plan = planning.resolve_plan(problem, cfg)
+        return jax.vmap(lambda xe, qe: planning.execute(plan, xe, qe))(x, kern)
     return jnp.einsum("ecd,edf->ecf", x, kern.astype(x.dtype),
                       preferred_element_type=jnp.float32).astype(x.dtype)
 
 
 def _dp_axes(T: int):
     """DP axes of the ambient mesh that divide T (empty outside set_mesh)."""
-    try:
-        mesh = jax.sharding.get_abstract_mesh()
-    except Exception:  # pragma: no cover
-        return (), None
-    if mesh is None or not mesh.axis_names:
+    mesh = compat.get_abstract_mesh()
+    if mesh is None:
         return (), None
     axes = []
     n = 1
@@ -144,7 +150,7 @@ def moe_ffn(p, x: jax.Array, *, num_experts: int, top_k: int,
                 capacity_factor=capacity_factor, cfg=cfg)
             return y, jax.lax.pmean(a, dp)
 
-        yt, aux = jax.shard_map(
+        yt, aux = compat.shard_map(
             local, mesh=mesh, axis_names=set(dp),
             in_specs=(P(), P(dp, None)),
             out_specs=(P(dp, None), P()),

@@ -113,6 +113,15 @@ def param_shardings(params, mesh, *, fsdp: bool = False,
         is_leaf=lambda x: isinstance(x, QuantizedTensor))
 
 
+def _axis_entry(spec_axes):
+    """First entry of a batch_spec as a PartitionSpec element, normalizing a
+    singleton tuple to the bare axis name (older jax compares them unequal)."""
+    if len(spec_axes) == 0 or spec_axes[0] is None:
+        return None
+    a = spec_axes[0]
+    return a[0] if isinstance(a, tuple) and len(a) == 1 else a
+
+
 def batch_spec(B: int, mesh) -> P:
     """Shard the batch dim over as many DP axes as divisibility allows."""
     axes = [a for a in ("pod", "data") if a in mesh.axis_names]
@@ -130,8 +139,7 @@ def data_shardings(tree, mesh, *, batch_axis: int = 0):
 
     def visit(leaf):
         spec = [None] * leaf.ndim
-        bs = batch_spec(leaf.shape[batch_axis], mesh)
-        spec[batch_axis] = bs[0] if len(bs) > 0 else None
+        spec[batch_axis] = _axis_entry(batch_spec(leaf.shape[batch_axis], mesh))
         return NamedSharding(mesh, P(*spec))
 
     return jax.tree.map(visit, tree)
@@ -148,8 +156,7 @@ def decode_state_shardings(state, cfg, mesh):
         spec = [None] * leaf.ndim
         # layer-stacked leaves: axis0=L, axis1=B, then shape-specific
         if leaf.ndim >= 2:
-            bspec = batch_spec(leaf.shape[1], mesh)
-            spec[1] = bspec[0] if len(bspec) > 0 else None
+            spec[1] = _axis_entry(batch_spec(leaf.shape[1], mesh))
         if ("k" in names or "v" in names or "pos" in names) and leaf.ndim >= 3:
             # KVCache leaves (L, B, W, [Hkv, D]) — shard window over model
             if _divisible(leaf.shape[2], model):

@@ -1,9 +1,13 @@
-"""Autotuner invariants: VMEM fit, validity, and sane regime behavior."""
-import hypothesis.strategies as st
+"""Autotuner invariants: VMEM fit, validity, and sane regime behavior.
+
+(Deterministic parametrized sweep — formerly hypothesis-driven.)
+"""
+import itertools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+import pytest
 
 from repro.core.quant import quantize
 from repro.kernels import ref
@@ -11,10 +15,10 @@ from repro.kernels.autotune import VMEM_BUDGET, autotune_w4a16, vmem_working_set
 from repro.kernels.w4a16_fused import w4a16_fused
 
 
-@given(st.sampled_from([1, 8, 64, 512]),
-       st.sampled_from([1024, 2048, 8192]),
-       st.sampled_from([2048, 4096, 16384]))
-@settings(deadline=None, max_examples=20)
+@pytest.mark.parametrize(
+    "M,N,K", itertools.product([1, 8, 64, 512],
+                               [1024, 2048, 8192],
+                               [2048, 4096, 16384]))
 def test_autotune_fits_vmem_and_divides(M, N, K):
     bm, bn, bk, s = autotune_w4a16(M, N, K, group=128)
     assert vmem_working_set(bm, bn, bk, 128) <= VMEM_BUDGET

@@ -23,6 +23,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
+from repro.core.compat import set_mesh, shard_map
 from repro.models import transformer as T
 from repro.optim import AdamWConfig, adamw_init
 from repro.runtime import steps as rsteps
@@ -45,7 +46,7 @@ single = jax.jit(rsteps.make_train_step(cfg, opt_cfg, settings))
 p1, o1, m1 = single(params, opt, inputs)
 
 mesh = jax.make_mesh((4, 2), ("data", "model"))
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     fn = rsteps.jit_train_step(
         cfg, mesh, settings,
         jax.eval_shape(lambda: params),
@@ -62,7 +63,6 @@ out["param_maxdiff"] = max(jax.tree.leaves(diffs))
 from repro.core.quant import quantize
 from repro.kernels import ref
 from repro.kernels.w4a16_fused import w4a16_fused
-from jax import shard_map
 
 K, N, M = 512, 256, 8
 w = jax.random.normal(key, (K, N), jnp.float32)
@@ -78,7 +78,7 @@ tp = shard_map(
     per_shard, mesh=mesh,
     in_specs=(P(None, None), P(None, "model"), P(None, "model")),
     out_specs=P(None, "model"), check_vma=False)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     y = tp(x, qt.packed, qt.scales)
 want = ref.w4a16_ref(x, qt)
 out["tp_w4a16_err"] = float(jnp.abs(y - want).max())
