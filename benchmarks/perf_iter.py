@@ -110,16 +110,24 @@ def _cell_plans(planning, arch, shape_name):
         return None
     M = shape.global_batch if shape.kind == "decode" \
         else shape.global_batch * shape.seq_len
+    from repro.core import quant
+
+    base_fmt = quant.get_format(getattr(cfg, "quant_format",
+                                        quant.DEFAULT_FORMAT))
     out = {}
     for K, N in [(cfg.d_model, cfg.q_dim), (cfg.q_dim, cfg.d_model),
                  (cfg.d_model, cfg.d_ff), (cfg.d_ff, cfg.d_model)]:
         g = next((gg for gg in (cfg.group_size, 64, 32) if K % gg == 0), None)
         if g is None:
             continue
+        fmt = base_fmt.with_group_size(g)
+        if fmt.scale_granularity != "group":
+            g = K                    # channel/tensor: one group spans K
         problem = planning.MatmulProblem(
             M=M, N=N, K=K, group_size=g,
             act_dtype=str(jnp.dtype(cfg.dtype)),
-            out_dtype=str(jnp.dtype(cfg.dtype)), backend="tpu")
+            out_dtype=str(jnp.dtype(cfg.dtype)), backend="tpu",
+            format=fmt.name)
         out[problem.layer_key] = planning.plan_matmul(problem).to_dict()
     return out
 

@@ -2,16 +2,20 @@
 
     PYTHONPATH=src python -m benchmarks.run            # all benches
     PYTHONPATH=src python -m benchmarks.run fig2 fig3  # a subset
+    PYTHONPATH=src python -m benchmarks.run --quick    # CI perf snapshot
+                                                       # -> BENCH_quickstart.json
 
 Prints ``name,us_per_call,derived`` CSV rows per the repo convention.
 Wall-clock rows are CPU interpret-mode trends (kernel-correctness-level
 numbers); the calibrated Ascend model provides the paper-figure
 reproduction, and the TPU roofline (benchmarks/roofline.py over the dry-run
-records) provides the target-hardware numbers.
+records) provides the target-hardware numbers. ``--format`` runs the
+kernel/quick benches under any registered QuantFormat.
 """
 from __future__ import annotations
 
-import sys
+import argparse
+import json
 import time
 
 import jax
@@ -19,9 +23,12 @@ import jax.numpy as jnp
 
 from repro.configs import PAPER_BATCH_SIZES, PAPER_GEMM_SHAPES
 from repro.core import costmodel as cm
+from repro.core import quant
 from repro.core.quant import quantize
 from repro.kernels import planning
 from repro.kernels.gemm import gemm
+
+BENCH_FORMAT = quant.DEFAULT_FORMAT      # set by main() from --format
 
 
 def _time(fn, *args, warmup=1, iters=3):
@@ -84,29 +91,35 @@ def bench_fig3_w4a16_vs_fp16():
 # ---------------------------------------------------------------------------
 
 def bench_kernel_walltime():
-    """Interpret-mode wall time of the actual Pallas kernels on scaled-down
-    paper shapes: every registered strategy vs native bf16 GEMM, all through
-    the planned execute path."""
-    print("# kernels: name,us_per_call,derived(ratio_vs_xla)")
+    """Interpret-mode wall time of the actual kernels on scaled-down paper
+    shapes: every strategy that supports the benched QuantFormat vs native
+    bf16 GEMM, all through the planned execute path."""
+    fmt = quant.get_format(BENCH_FORMAT)
+    strategies = list(planning.strategies_for_format(fmt.name))
+    baseline = "xla" if "xla" in strategies else strategies[0]
+    print(f"# kernels: name,us_per_call,derived(ratio_vs_{baseline})  "
+          f"[format={fmt.name}]")
     key = jax.random.PRNGKey(0)
     for (N, K) in [(512, 4096), (1024, 2048)]:
         for M in (1, 16):
             w = jax.random.normal(key, (K, N), jnp.float32)
             x = jax.random.normal(key, (M, K), jnp.bfloat16)
-            qt = quantize(w, group_size=128, out_dtype=jnp.bfloat16)
+            qt = quantize(w, fmt, out_dtype=jnp.bfloat16)
             problem = planning.MatmulProblem.from_operands(x, qt)
             plans = {s: planning.plan_matmul(problem, strategy=s)
-                     for s in ("xla", "fused", "decoupled")}
-            t_xla = _time(lambda: planning.execute(plans["xla"], x, qt))
-            for strat in ("fused", "decoupled"):
+                     for s in strategies}
+            t_base = _time(lambda: planning.execute(plans[baseline], x, qt))
+            for strat in strategies:
+                if strat == baseline:
+                    continue
                 t = _time(lambda s=strat: planning.execute(
                     plans[s], x, qt, interpret=True))
                 print(f"kernels/{strat}/N{N}_K{K}_M{M},{t:.1f},"
-                      f"{t / t_xla:.2f}")
+                      f"{t / t_base:.2f}")
             wd = w.astype(jnp.bfloat16)
             t_g = _time(lambda: gemm(x, wd, interpret=True))
             print(f"kernels/gemm_bf16/N{N}_K{K}_M{M},{t_g:.1f},"
-                  f"{t_g / t_xla:.2f}")
+                  f"{t_g / t_base:.2f}")
 
 
 # ---------------------------------------------------------------------------
@@ -153,6 +166,43 @@ def bench_capacity():
               f"# {fp16/1e9:.1f}GB -> {w4/1e9:.1f}GB")
 
 
+# ---------------------------------------------------------------------------
+# Quick CI snapshot: shapes → ms + achieved GB/s, persisted as JSON so every
+# CI run leaves a perf-trajectory artifact (BENCH_quickstart.json)
+# ---------------------------------------------------------------------------
+
+def bench_quick(out_path: str = "BENCH_quickstart.json") -> dict:
+    """Planned execute on scaled-down paper shapes: wall-clock ms and
+    achieved GB/s (quantized weight + activation + output bytes / time),
+    written to ``out_path`` for the CI artifact upload."""
+    print(f"# quick: name,us_per_call,derived(GB/s)  [format={BENCH_FORMAT}]")
+    fmt = quant.get_format(BENCH_FORMAT)
+    key = jax.random.PRNGKey(0)
+    cells = []
+    for (N, K) in [(512, 4096), (1024, 2048)]:
+        for M in (1, 16):
+            w = jax.random.normal(key, (K, N), jnp.float32)
+            x = jax.random.normal(key, (M, K), jnp.bfloat16)
+            qt = quantize(w, fmt, out_dtype=jnp.bfloat16)
+            problem = planning.MatmulProblem.from_operands(x, qt)
+            plan = planning.plan_matmul(problem)
+            t_us = _time(lambda: planning.execute(plan, x, qt))
+            moved = qt.nbytes_packed() + x.nbytes + M * N * 2
+            gbps = moved / (t_us * 1e-6) / 1e9
+            name = f"quick/{plan.strategy}/N{N}_K{K}_M{M}"
+            print(f"{name},{t_us:.1f},{gbps:.2f}")
+            cells.append({"name": name, "M": M, "N": N, "K": K,
+                          "strategy": plan.strategy,
+                          "ms": round(t_us / 1e3, 4),
+                          "gbps": round(gbps, 3)})
+    blob = {"format": BENCH_FORMAT, "backend": jax.default_backend(),
+            "cells": cells}
+    with open(out_path, "w") as f:
+        json.dump(blob, f, indent=1, sort_keys=True)
+    print(f"# quick: wrote {len(cells)} cells -> {out_path}")
+    return blob
+
+
 BENCHES = {
     "fig2": bench_fig2_splitk_vs_dataparallel,
     "fig3": bench_fig3_w4a16_vs_fp16,
@@ -162,9 +212,28 @@ BENCHES = {
 }
 
 
-def main() -> None:
-    which = [a for a in sys.argv[1:] if a in BENCHES] or list(BENCHES)
-    for name in which:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("benches", nargs="*", metavar="bench",
+                    help=f"subset of {list(BENCHES)} (default: all)")
+    ap.add_argument("--quick", action="store_true",
+                    help="run the quick perf snapshot and write "
+                         "BENCH_quickstart.json (the CI artifact)")
+    ap.add_argument("--format", default=quant.DEFAULT_FORMAT,
+                    help="QuantFormat name for quantized benches "
+                         "(w4a16_g128 | w8a16_channel | w4a8_g128 | ...)")
+    ap.add_argument("--out", default="BENCH_quickstart.json",
+                    help="--quick output path")
+    args = ap.parse_args(argv)
+
+    global BENCH_FORMAT
+    BENCH_FORMAT = quant.get_format(args.format).name
+    if args.quick:
+        bench_quick(args.out)
+        return
+    for name in args.benches or list(BENCHES):
+        if name not in BENCHES:
+            ap.error(f"unknown bench {name!r}; one of {list(BENCHES)}")
         BENCHES[name]()
 
 

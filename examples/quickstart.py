@@ -27,8 +27,9 @@ err = float(jnp.abs(y - x @ dequantize(qt)).max())
 print(f"planned: {plan.strategy} split_k={plan.split_k} "
       f"out={y.shape} max|err|={err:.2e}")
 
-# 3. Any registered strategy can be forced — same execute, no dispatcher.
-for strategy in planning.available_strategies():
+# 3. Any strategy supporting the tensor's QuantFormat can be forced —
+#    same execute, no dispatcher (format-incompatible ones are refused).
+for strategy in planning.strategies_for_format(qt.format.name):
     p = planning.plan_matmul(problem, strategy=strategy)
     y = planning.execute(p, x, qt, interpret=True)
     err = float(jnp.abs(y - x @ dequantize(qt)).max())
@@ -49,3 +50,18 @@ p = layers.init_linear(key, K, N, jnp.float32)
 p["kernel"] = quantize(p["kernel"], group_size=128)
 y = layers.linear(p, x)
 print("quantized Linear:", y.shape, "finite:", bool(jnp.all(jnp.isfinite(y))))
+
+# 6. Quantization formats are first-class and registered: the same plan →
+#    execute path runs W8A16 (per-channel int8) and W4A8 (dynamic int8
+#    activations, LiquidGEMM-style) — the planner only considers
+#    strategies that declare support for the tensor's format.
+from repro.core import quant
+
+for fmt_name in quant.available_formats():
+    qf = quantize(w, fmt_name)
+    prob = planning.MatmulProblem.from_operands(x, qf)
+    pf = planning.plan_matmul(prob)
+    err = float(jnp.abs(planning.execute(pf, x, qf) - x @ w).max())
+    print(f"  format={fmt_name:14s} bits=w{qf.format.weight_bits} "
+          f"scales={tuple(qf.scales.shape)} -> {pf.strategy:9s} "
+          f"max|err vs fp32|={err:.2e}")

@@ -15,5 +15,6 @@ if __name__ == "__main__":
         "--arch", "h2o-danube-1.8b", "--reduced",
         "--batch", "4", "--prompt-len", "32", "--gen", "12",
         "--strategy", "auto",
+        "--format", "w4a16_g128",     # or w8a16_channel / w4a8_g128
         "--plan-cache", "/tmp/repro_plan_cache.json",
     ])

@@ -8,7 +8,12 @@ Production notes (1000+ node deployment):
     checkpoint (the restart picks the previous complete step);
   * per-host sharded saving: each host writes only the addressable shards
     of its jax.Arrays (here: single host writes everything);
-  * QuantizedTensor leaves round-trip with their aux (group size, dtype).
+  * QuantizedTensor leaves round-trip with a full QuantFormat metadata
+    sidecar (format descriptor + group size + dtype) — restoring into a
+    model that expects a *different* quantization format fails loudly with
+    a format-mismatch error instead of silently mis-decoding the payload.
+    Pre-format checkpoints (no "format" key) resolve through the
+    default-format shim.
 """
 from __future__ import annotations
 
@@ -22,7 +27,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quant import QuantizedTensor
+from repro.core.quant import (
+    QuantFormat,
+    QuantizedTensor,
+    w4a16_format_for,
+)
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
 
@@ -69,6 +78,7 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
             meta["quantized"][key] = {
                 "group_size": leaf.group_size,
                 "out_dtype": jnp.dtype(leaf.out_dtype).name,
+                "format": leaf.format.to_dict(),
             }
         else:
             put(key, leaf)
@@ -113,7 +123,39 @@ def restore_checkpoint(ckpt_dir: str, like: Any, step: Optional[int] = None):
     for path, leaf in leaves:
         key = _key_str(path)
         if isinstance(leaf, QuantizedTensor):
-            q = meta["quantized"][key]
+            q = meta["quantized"].get(key)
+            if q is None:
+                raise ValueError(
+                    f"checkpoint mismatch at {key}: the model expects a "
+                    f"quantized ({leaf.format.name}) leaf but the "
+                    f"checkpoint stores a dense array — quantize the "
+                    f"restored tree (layers.quantize_tree) instead of "
+                    f"restoring into a quantized template")
+            # pre-format checkpoints carry only group_size: resolve them
+            # through the default-format (W4A16-family) shim. Deserialize
+            # by value (no registry mutation): restore must not register
+            # foreign formats, and a name collision with different fields
+            # should surface as the mismatch error below, not a
+            # registration conflict.
+            fmt = QuantFormat.from_dict(q["format"]) if "format" in q else \
+                w4a16_format_for(q["group_size"],
+                                 symmetric=key + "/__zeros" not in data)
+            if fmt != leaf.format:
+                detail = "" if fmt.name != leaf.format.name else (
+                    f" (same name, different fields: {fmt.to_dict()} vs "
+                    f"{leaf.format.to_dict()})")
+                raise ValueError(
+                    f"checkpoint format mismatch at {key}: checkpoint was "
+                    f"saved as {fmt.name!r} but the model expects "
+                    f"{leaf.format.name!r}{detail}; re-quantize the source "
+                    f"checkpoint or restore with a config whose "
+                    f"quant_format is {fmt.name!r}")
+            want = tuple(getattr(leaf.packed, "shape", ()))
+            got = tuple(data[key + "/__packed"].shape)
+            if want and got != want:
+                raise ValueError(
+                    f"checkpoint mismatch at {key}: packed payload "
+                    f"{got} != {want}")
             zeros_key = key + "/__zeros"
             out.append(QuantizedTensor(
                 packed=jnp.asarray(get(key + "/__packed")),
@@ -122,8 +164,17 @@ def restore_checkpoint(ckpt_dir: str, like: Any, step: Optional[int] = None):
                        if zeros_key in data else None),
                 group_size=q["group_size"],
                 out_dtype=jnp.dtype(q["out_dtype"]),
+                format=fmt,
             ))
         else:
+            if key not in data and key + "/__packed" in data:
+                fmt = meta["quantized"].get(key, {}).get(
+                    "format", {}).get("name", "a quantized format")
+                raise ValueError(
+                    f"checkpoint mismatch at {key}: the checkpoint stores "
+                    f"a quantized ({fmt}) leaf but the model expects a "
+                    f"dense array — restore into a quantized template "
+                    f"(quantize_tree the `like` tree first)")
             arr = get(key)
             want = tuple(leaf.shape)
             if tuple(arr.shape) != want:

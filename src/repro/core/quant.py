@@ -1,29 +1,54 @@
-"""INT4 weight-only quantization core (the paper's W4A16 substrate).
+"""Quantization core: first-class formats over the paper's W4A16 substrate.
 
-Implements uniform affine/symmetric group-wise quantization (paper Eq. 1):
+The paper's kernel is one point in a family of weight-quantized GEMMs. This
+module makes the family explicit: a :class:`QuantFormat` is a frozen,
+JSON-serializable descriptor (weight bits, packing layout, scale
+granularity, symmetric/zero-point, activation dtype) registered by name, and
+every :class:`QuantizedTensor` carries the format it was produced with.
+``quantize`` / ``dequantize`` / ``pack_weights`` / ``unpack_weights``
+dispatch through the format instead of through scattered kwargs.
+
+Built-in formats (see :func:`available_formats`):
+
+  ``w4a16_g128``    — the paper's format and the default: INT4 weights
+                      packed two-per-byte along K, group-128 scales,
+                      floating activations (paper Eq. 1/2).
+  ``w8a16_channel`` — INT8 weights, one scale per output channel,
+                      floating activations.
+  ``w4a8_g128``     — INT4 weights with group-128 scales plus *dynamic
+                      per-token INT8 activations* (LiquidGEMM-style W4A8);
+                      executed by the XLA reference path, see
+                      :func:`w4a8_matmul_ref`.
+
+Quantization math (paper Eq. 1, generalized to b bits):
 
     x_q = round(x / s) + z          (z = 0 for symmetric)
     Dequant(x_q) = s * (x_q - z)    (paper Eq. 2)
 
 Storage convention
 ------------------
-Weights are ``(K, N)`` (contraction dim first, like ``x @ w``).  Two INT4
-values are packed per ``int8`` byte **along K**:
+Weights are ``(K, N)`` (contraction dim first, like ``x @ w``). For 4-bit
+formats two INT4 values are packed per ``int8`` byte **along K**:
 
     byte[k, n] = (q[2k+1, n] << 4) | (q[2k, n] & 0xF)
 
 so the packed tensor is ``(K//2, N)`` int8 — byte-identical footprint to the
-Ascend INT32-nibble packing (K*N/2 bytes).  N stays the minor (lane)
-dimension, which is what the TPU kernels want.
+Ascend INT32-nibble packing (K*N/2 bytes). 8-bit formats store ``(K, N)``
+int8 rows directly. N stays the minor (lane) dimension, which is what the
+TPU kernels want.
 
-Scales (and optional zero-points) are per ``(K-group, N)``:
-``scales[(k // group_size), n]``.
+Scales (and optional zero-points) are ``(K/group, N)`` for group
+granularity, ``(1, N)`` for per-channel, ``(1, 1)`` for per-tensor. In all
+cases ``QuantizedTensor.group_size`` holds the number of K rows sharing one
+scale row (``K`` for channel/tensor), so ``jnp.repeat(scales, group_size,
+axis=0)`` reconstructs the per-element scale for every granularity.
 """
 from __future__ import annotations
 
 import dataclasses
+import re
 from functools import partial
-from typing import Optional
+from typing import Any, Dict, Mapping, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -31,43 +56,230 @@ import jax.numpy as jnp
 INT4_MIN = -8
 INT4_MAX = 7
 DEFAULT_GROUP_SIZE = 128
+DEFAULT_FORMAT = "w4a16_g128"
 
+_PACKINGS = ("int4_pairs_k", "int8_rows")
+_GRANULARITIES = ("group", "channel", "tensor")
+
+
+# ---------------------------------------------------------------------------
+# QuantFormat: the descriptor + registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QuantFormat:
+    """A quantization format: what the bits mean and how they are laid out.
+
+    Frozen, hashable, JSON round-trips via to_dict/from_dict. ``act_dtype``
+    is the *nominal* activation dtype: floating names ("bfloat16",
+    "float16") mean native float activations (the kernels accept any float
+    input); ``"int8"`` means activations are dynamically quantized per
+    token at matmul time (W4A8).
+    """
+
+    name: str
+    weight_bits: int = 4             # 4 | 8
+    packing: str = "int4_pairs_k"    # int4_pairs_k | int8_rows
+    scale_granularity: str = "group"  # group | channel | tensor
+    group_size: int = DEFAULT_GROUP_SIZE   # K rows per scale ("group" only)
+    symmetric: bool = True           # False => zero-points are stored
+    act_dtype: str = "bfloat16"      # nominal activations; "int8" = dynamic
+
+    def __post_init__(self):
+        if self.packing not in _PACKINGS:
+            raise ValueError(f"unknown packing {self.packing!r}; "
+                             f"one of {_PACKINGS}")
+        if self.scale_granularity not in _GRANULARITIES:
+            raise ValueError(f"unknown scale granularity "
+                             f"{self.scale_granularity!r}; "
+                             f"one of {_GRANULARITIES}")
+        want_bits = 4 if self.packing == "int4_pairs_k" else 8
+        if self.weight_bits != want_bits:
+            raise ValueError(f"packing {self.packing!r} stores "
+                             f"{want_bits}-bit weights, got "
+                             f"weight_bits={self.weight_bits}")
+        if self.scale_granularity == "group" and self.group_size <= 0:
+            raise ValueError("group granularity needs group_size > 0")
+
+    # -- derived ----------------------------------------------------------
+    @property
+    def qmin(self) -> int:
+        return -(1 << (self.weight_bits - 1))
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.weight_bits - 1)) - 1
+
+    @property
+    def pack_factor(self) -> int:
+        """K rows represented per packed row (2 for nibble pairs)."""
+        return 2 if self.packing == "int4_pairs_k" else 1
+
+    @property
+    def quantized_activations(self) -> bool:
+        return self.act_dtype == "int8"
+
+    def scale_rows(self, K: int) -> int:
+        return K // self.group_size if self.scale_granularity == "group" \
+            else 1
+
+    # -- derived variants -------------------------------------------------
+    def with_group_size(self, group_size: int) -> "QuantFormat":
+        """This format with another group size (registered on demand).
+        A no-op for channel/tensor granularity, where there are no groups."""
+        if self.scale_granularity != "group" \
+                or group_size == self.group_size:
+            return self
+        name, n = re.subn(r"_g\d+", f"_g{group_size}", self.name, count=1)
+        if not n:
+            name = f"{self.name}_g{group_size}"
+        return register_format(
+            dataclasses.replace(self, name=name, group_size=group_size))
+
+    def with_symmetric(self, symmetric: bool) -> "QuantFormat":
+        """Symmetric/asymmetric variant (``_asym`` name suffix toggles)."""
+        if symmetric == self.symmetric:
+            return self
+        name = self.name[:-len("_asym")] if self.name.endswith("_asym") \
+            else self.name + "_asym"
+        return register_format(
+            dataclasses.replace(self, name=name, symmetric=symmetric))
+
+    # -- serialization ----------------------------------------------------
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "QuantFormat":
+        return cls(**dict(d))
+
+
+_FORMAT_REGISTRY: Dict[str, QuantFormat] = {}
+
+
+def register_format(fmt: QuantFormat, *, overwrite: bool = False
+                    ) -> QuantFormat:
+    """Register ``fmt`` under its name and return it (usable as a plain
+    call or chained). Re-registering an identical format is a no-op; a
+    *different* format under an existing name raises unless
+    ``overwrite=True``."""
+    existing = _FORMAT_REGISTRY.get(fmt.name)
+    if existing is not None and existing != fmt and not overwrite:
+        raise ValueError(
+            f"format {fmt.name!r} is already registered with different "
+            f"fields; pass overwrite=True to replace it")
+    _FORMAT_REGISTRY[fmt.name] = fmt
+    return fmt
+
+
+def get_format(name: str) -> QuantFormat:
+    try:
+        return _FORMAT_REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown quantization format {name!r}; registered: "
+            f"{available_formats()}") from None
+
+
+def available_formats() -> Tuple[str, ...]:
+    return tuple(_FORMAT_REGISTRY)
+
+
+FormatLike = Union[None, str, QuantFormat, Mapping[str, Any]]
+
+
+def resolve_format(spec: FormatLike) -> QuantFormat:
+    """Resolve a name / QuantFormat / descriptor dict / None (the default
+    format) to a registered QuantFormat. Unregistered descriptors are
+    registered so their name resolves from then on."""
+    if spec is None:
+        return _FORMAT_REGISTRY[DEFAULT_FORMAT]
+    if isinstance(spec, str):
+        return get_format(spec)
+    if isinstance(spec, QuantFormat):
+        return register_format(spec)
+    if isinstance(spec, Mapping):
+        return register_format(QuantFormat.from_dict(spec))
+    raise TypeError(f"cannot resolve a quantization format from "
+                    f"{type(spec).__name__}")
+
+
+def w4a16_format_for(group_size: int, *, symmetric: bool = True
+                     ) -> QuantFormat:
+    """The W4A16-family format for a group size — the default-format shim
+    legacy call sites (bare ``group_size=`` kwargs, pre-format plan caches
+    and checkpoints) resolve through."""
+    fmt = _FORMAT_REGISTRY[DEFAULT_FORMAT].with_group_size(group_size)
+    return fmt.with_symmetric(symmetric)
+
+
+# The built-in formats. w4a16_g128 is the paper's format and the default;
+# w8a16_channel and w4a8_g128 are the first two beyond-paper family members
+# (cf. LiquidGEMM W4A8 in PAPERS.md).
+W4A16_G128 = register_format(QuantFormat(
+    name="w4a16_g128", weight_bits=4, packing="int4_pairs_k",
+    scale_granularity="group", group_size=128, symmetric=True,
+    act_dtype="bfloat16"))
+W8A16_CHANNEL = register_format(QuantFormat(
+    name="w8a16_channel", weight_bits=8, packing="int8_rows",
+    scale_granularity="channel", group_size=0, symmetric=True,
+    act_dtype="bfloat16"))
+W4A8_G128 = register_format(QuantFormat(
+    name="w4a8_g128", weight_bits=4, packing="int4_pairs_k",
+    scale_granularity="group", group_size=128, symmetric=True,
+    act_dtype="int8"))
+
+
+# ---------------------------------------------------------------------------
+# QuantizedTensor
+# ---------------------------------------------------------------------------
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class QuantizedTensor:
-    """A W4A16 weight: packed int4 payload + group-wise scales (+ zeros)."""
+    """A quantized weight: packed payload + scales (+ zeros) + its format.
 
-    packed: jax.Array          # (K//2, N) int8, two nibbles per byte
-    scales: jax.Array          # (K//group_size, N) float32/bfloat16
-    zeros: Optional[jax.Array]  # (K//group_size, N) same dtype, or None (symmetric)
-    group_size: int
-    out_dtype: jnp.dtype       # dtype dequantized weights are materialized in
+    ``format=None`` (the legacy constructor) infers the W4A16-family format
+    from ``group_size`` and the presence of ``zeros`` — pre-format call
+    sites and checkpoints keep working unchanged.
+    """
+
+    packed: jax.Array          # (K//pack_factor, N) int8
+    scales: jax.Array          # (scale_rows, N) float32/bfloat16
+    zeros: Optional[jax.Array]  # same shape as scales, or None (symmetric)
+    group_size: int            # K rows per scale row (K for channel/tensor)
+    out_dtype: jnp.dtype       # dtype dequantized weights materialize in
+    format: Optional[QuantFormat] = None
+
+    def __post_init__(self):
+        if self.format is None:
+            self.format = w4a16_format_for(
+                self.group_size, symmetric=self.zeros is None)
 
     # -- pytree plumbing ---------------------------------------------------
     def tree_flatten(self):
         children = (self.packed, self.scales, self.zeros)
-        aux = (self.group_size, self.out_dtype)
+        aux = (self.group_size, self.out_dtype, self.format)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         packed, scales, zeros = children
-        group_size, out_dtype = aux
-        return cls(packed, scales, zeros, group_size, out_dtype)
+        group_size, out_dtype, fmt = aux
+        return cls(packed, scales, zeros, group_size, out_dtype, fmt)
 
     # -- convenience -------------------------------------------------------
     @property
     def shape(self):
-        return (self.packed.shape[0] * 2, self.packed.shape[1])
+        return (self.K, self.N)
 
     @property
     def K(self) -> int:
-        return self.packed.shape[0] * 2
+        return self.packed.shape[-2] * self.format.pack_factor
 
     @property
     def N(self) -> int:
-        return self.packed.shape[1]
+        return self.packed.shape[-1]
 
     def nbytes_packed(self) -> int:
         n = self.packed.size  # 1 byte each
@@ -107,74 +319,165 @@ def unpack_int4(packed: jax.Array) -> jax.Array:
     return jnp.stack([lo, hi], axis=1).reshape(2 * k2, n)
 
 
+def pack_weights(q: jax.Array, fmt: FormatLike = None) -> jax.Array:
+    """Pack integer weight values per the format's layout."""
+    fmt = resolve_format(fmt)
+    if fmt.packing == "int4_pairs_k":
+        return pack_int4(q)
+    return q.astype(jnp.int8)            # int8_rows: stored as-is
+
+
+def unpack_weights(packed: jax.Array, fmt: FormatLike = None) -> jax.Array:
+    """Inverse of :func:`pack_weights` → (K, N) int8."""
+    fmt = resolve_format(fmt)
+    if fmt.packing == "int4_pairs_k":
+        return unpack_int4(packed)
+    return packed.astype(jnp.int8)
+
+
 # ---------------------------------------------------------------------------
-# quantize / dequantize
+# quantize / dequantize (format-dispatched)
 # ---------------------------------------------------------------------------
 
 def quantize(
     w: jax.Array,
+    format: FormatLike = None,
     *,
-    group_size: int = DEFAULT_GROUP_SIZE,
-    symmetric: bool = True,
+    group_size: Optional[int] = None,
+    symmetric: Optional[bool] = None,
     scale_dtype: jnp.dtype = jnp.float32,
     out_dtype: Optional[jnp.dtype] = None,
 ) -> QuantizedTensor:
-    """Group-wise INT4 quantization of a (K, N) weight matrix."""
+    """Quantize a (K, N) weight matrix per ``format``.
+
+    ``format`` may be a registered name, a QuantFormat, a descriptor dict,
+    or None (the default ``w4a16_g128``). The legacy ``group_size=`` /
+    ``symmetric=`` kwargs derive a variant of the chosen format, so
+    pre-format call sites behave exactly as before.
+    """
+    fmt = resolve_format(format)
+    if group_size is not None:
+        fmt = fmt.with_group_size(group_size)
+    if symmetric is not None:
+        fmt = fmt.with_symmetric(symmetric)
+
     if w.ndim != 2:
         raise ValueError(f"quantize expects 2-D (K, N) weight, got {w.shape}")
     K, N = w.shape
-    if K % group_size:
-        raise ValueError(f"K={K} not divisible by group_size={group_size}")
-    if (K // group_size) % 1 or group_size % 2:
-        raise ValueError("group_size must be even")
+    if fmt.packing == "int4_pairs_k" and K % 2:
+        raise ValueError(f"K={K} must be even for {fmt.packing} packing")
+    if fmt.scale_granularity == "group":
+        g = fmt.group_size
+        if K % g:
+            raise ValueError(f"K={K} not divisible by group_size={g} "
+                             f"(format {fmt.name!r})")
+        if fmt.packing == "int4_pairs_k" and g % 2:
+            raise ValueError("group_size must be even")
+    else:
+        g = K                           # channel/tensor: one group spans K
     out_dtype = jnp.dtype(out_dtype or w.dtype)
 
-    g = w.astype(jnp.float32).reshape(K // group_size, group_size, N)
-    if symmetric:
-        amax = jnp.max(jnp.abs(g), axis=1)                      # (K/g, N)
-        s = jnp.maximum(amax / INT4_MAX, 1e-8)
+    gw = w.astype(jnp.float32).reshape(K // g, g, N)
+    reduce_axes = (1, 2) if fmt.scale_granularity == "tensor" else (1,)
+    keep = dict(axis=reduce_axes, keepdims=True)
+    if fmt.symmetric:
+        amax = jnp.max(jnp.abs(gw), **keep)
+        s = jnp.maximum(amax / fmt.qmax, 1e-8)
         z = None
-        q = jnp.round(g / s[:, None, :])
+        q = jnp.round(gw / s)
     else:
-        gmax = jnp.max(g, axis=1)
-        gmin = jnp.min(g, axis=1)
-        s = jnp.maximum((gmax - gmin) / (INT4_MAX - INT4_MIN), 1e-8)
-        z = jnp.round(-gmin / s) + INT4_MIN                     # zero-point
-        q = jnp.round(g / s[:, None, :]) + z[:, None, :]
-    q = jnp.clip(q, INT4_MIN, INT4_MAX).astype(jnp.int8).reshape(K, N)
+        gmax = jnp.max(gw, **keep)
+        gmin = jnp.min(gw, **keep)
+        s = jnp.maximum((gmax - gmin) / (fmt.qmax - fmt.qmin), 1e-8)
+        z = jnp.round(-gmin / s) + fmt.qmin                 # zero-point
+        q = jnp.round(gw / s) + z
+    q = jnp.clip(q, fmt.qmin, fmt.qmax).astype(jnp.int8).reshape(K, N)
+
+    def flat(a):                         # drop the reduced group axis:
+        return a[:, 0]                   # (K/g, N) | (1, N) | (1, 1)
     return QuantizedTensor(
-        packed=pack_int4(q),
-        scales=s.astype(scale_dtype),
-        zeros=None if z is None else z.astype(scale_dtype),
-        group_size=group_size,
+        packed=pack_weights(q, fmt),
+        scales=flat(s).astype(scale_dtype),
+        zeros=None if z is None else flat(z).astype(scale_dtype),
+        group_size=g,
         out_dtype=out_dtype,
+        format=fmt,
     )
 
 
 def dequantize(qt: QuantizedTensor) -> jax.Array:
     """Materialize the full (K, N) weight in ``qt.out_dtype`` (paper Eq. 2)."""
-    q = unpack_int4(qt.packed).astype(jnp.float32)
+    q = unpack_weights(qt.packed, qt.format).astype(jnp.float32)
     K, N = q.shape
     g = qt.group_size
-    s = jnp.repeat(qt.scales.astype(jnp.float32), g, axis=0)    # (K, N)
+
+    def expand(a):                       # scale rows → per-element (K, .)
+        return jnp.repeat(a.astype(jnp.float32), g, axis=0)
     if qt.zeros is not None:
-        z = jnp.repeat(qt.zeros.astype(jnp.float32), g, axis=0)
-        q = q - z
-    return (q * s).astype(qt.out_dtype)
+        q = q - expand(qt.zeros)
+    return (q * expand(qt.scales)).astype(qt.out_dtype)
 
 
 # ---------------------------------------------------------------------------
-# reference W4A16 matmul (pure jnp oracle; kernels are checked against this)
+# reference matmuls (pure jnp oracles; kernels are checked against these)
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=())
 def w4a16_matmul_ref(x: jax.Array, qt: QuantizedTensor) -> jax.Array:
-    """``x @ Dequant(W)`` — the paper's Eq. 2 computed the naive way."""
+    """``x @ Dequant(W)`` — the paper's Eq. 2 computed the naive way.
+
+    Valid for every float-activation format (w4a16 family, w8a16).
+    """
     w = dequantize(qt)
     acc = jnp.dot(
         x.astype(qt.out_dtype), w, preferred_element_type=jnp.float32
     )
     return acc.astype(x.dtype)
+
+
+def quantize_activations_int8(x: jax.Array):
+    """Dynamic per-token symmetric INT8 activation quantization.
+
+    Returns ``(x_q int8, x_scale fp32)`` with ``x_scale`` shaped like ``x``
+    minus the last dim plus a keepdim (one scale per token/row) — the
+    LiquidGEMM-style dynamic activation path of ``w4a8_*`` formats.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    s = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(xf / s), -127, 127).astype(jnp.int8)
+    return q, s
+
+
+@partial(jax.jit, static_argnames=())
+def w4a8_matmul_ref(x: jax.Array, qt: QuantizedTensor) -> jax.Array:
+    """W4A8 GEMM: dynamic INT8 activations × INT4 weights, integer
+    accumulation per K-group, scales applied at the group boundary:
+
+        y[m, n] = xs[m] * sum_G ws[G, n] * sum_g xq[m, G, g] * wq[G, g, n]
+
+    This is the XLA reference execution path for ``w4a8_*`` formats (a
+    Pallas W4A8 kernel can plug into the same strategy slot later).
+    """
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    x2 = x.reshape(-1, K)
+    M = x2.shape[0]
+    xq, xs = quantize_activations_int8(x2)
+    wq = unpack_weights(qt.packed, qt.format)            # (K, N) int8
+    N = wq.shape[-1]
+    g = qt.group_size
+    G = K // g
+    acc = jnp.einsum(
+        "mgk,gkn->mgn", xq.reshape(M, G, g), wq.reshape(G, g, N),
+        preferred_element_type=jnp.int32,
+    ).astype(jnp.float32)                                # (M, G, N)
+    if qt.zeros is not None:
+        tok = jnp.sum(xq.reshape(M, G, g).astype(jnp.int32),
+                      axis=2).astype(jnp.float32)        # (M, G)
+        acc = acc - qt.zeros.astype(jnp.float32)[None] * tok[:, :, None]
+    y = jnp.einsum("mgn,gn->mn", acc, qt.scales.astype(jnp.float32))
+    return (y * xs).astype(x.dtype).reshape(*lead, N)
 
 
 def quantization_error_bound(qt: QuantizedTensor) -> jax.Array:

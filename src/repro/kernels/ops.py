@@ -17,7 +17,9 @@ Strategies (all registered in planning.py — add more with
   "decoupled" — paper-faithful 3-phase Ascend pipeline through HBM
   "reference" — pure-jnp oracle (XLA fuses as it pleases)
   "xla"       — dequantize once via XLA then a single jnp.dot
-  "auto"      — cost-model planner ranks every registered strategy
+  "w4a8_xla"  — dynamic int8-activation reference path (w4a8_* formats)
+  "auto"      — cost-model planner ranks every registered strategy that
+                supports the tensor's QuantFormat (see core/quant.py)
 """
 from __future__ import annotations
 

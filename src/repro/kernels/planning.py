@@ -6,13 +6,18 @@ round-trips through global memory. This module makes those decisions
 first-class objects instead of string branches and scattered kwargs:
 
   :class:`MatmulProblem`  — a hashable description of one GEMM
-                            (shapes, dtypes, quantization, backend).
+                            (shapes, dtypes, quantization format, backend).
   :class:`KernelPlan`     — a serializable dispatch decision
                             (strategy + split_k + tile shape).
   registry                — ``@register_strategy("name")`` makes a strategy
                             pluggable; the planner ranks whatever is
                             registered by its cost model, so adding a
-                            backend never edits a dispatcher.
+                            backend never edits a dispatcher. Strategies
+                            declare the :class:`~repro.core.quant.
+                            QuantFormat` names they can execute
+                            (``formats=`` fnmatch patterns); the planner
+                            only considers matching strategies and a forced
+                            strategy/format mismatch is refused loudly.
   :func:`plan_matmul`     — cost-model planner folding the Split-K
                             occupancy heuristic and the roofline models of
                             ``core/costmodel.py`` into one ranked decision,
@@ -30,9 +35,12 @@ backwards-compatible shim over this module. See docs/api.md.
 from __future__ import annotations
 
 import dataclasses
+import fnmatch
 import functools
 import json
 import math
+import os
+import tempfile
 import threading
 from typing import Any, Callable, Dict, Mapping, Optional, Tuple
 
@@ -41,7 +49,13 @@ import jax.numpy as jnp
 
 from repro.core import compat  # noqa: F401  (registers vmap rules "xla" needs)
 from repro.core import costmodel
-from repro.core.quant import QuantizedTensor, dequantize
+from repro.core.quant import (
+    DEFAULT_FORMAT,
+    QuantizedTensor,
+    dequantize,
+    w4a8_matmul_ref,
+    w4a16_format_for,
+)
 from repro.kernels import ref
 from repro.kernels.w4a16_decoupled import w4a16_decoupled
 from repro.kernels.w4a16_fused import w4a16_fused
@@ -49,6 +63,7 @@ from repro.kernels.w4a16_fused import w4a16_fused
 __all__ = [
     "MatmulProblem", "KernelPlan", "Strategy",
     "register_strategy", "get_strategy", "available_strategies",
+    "strategies_for_format",
     "plan_matmul", "resolve_plan", "execute",
     "PlanCache", "PLAN_CACHE", "load_plan_cache", "save_plan_cache",
     "choose_split_k", "num_cores",
@@ -65,7 +80,9 @@ class MatmulProblem:
 
     Hashable and order-insensitive — the plan cache and the planner key on
     this. ``batch`` counts independent GEMMs sharing the plan (vmapped
-    expert stacks); ``M`` is rows per GEMM.
+    expert stacks); ``M`` is rows per GEMM. ``format`` is the registered
+    :class:`~repro.core.quant.QuantFormat` name, so plans cache per-format
+    and the planner can filter strategies on the formats they support.
     """
 
     M: int
@@ -77,6 +94,7 @@ class MatmulProblem:
     has_zeros: bool = False
     backend: str = "cpu"
     batch: int = 1
+    format: str = DEFAULT_FORMAT
 
     @classmethod
     def from_operands(cls, x: jax.Array, qt: QuantizedTensor, *,
@@ -93,6 +111,7 @@ class MatmulProblem:
             has_zeros=qt.zeros is not None,
             backend=backend or jax.default_backend(),
             batch=batch,
+            format=qt.format.name,
         )
 
     @property
@@ -105,7 +124,18 @@ class MatmulProblem:
 
     @classmethod
     def from_dict(cls, d: Mapping[str, Any]) -> "MatmulProblem":
-        return cls(**dict(d))
+        d = dict(d)
+        if "format" not in d:
+            # pre-format plan caches: every entry was the W4A16 family —
+            # derive the format name the same way the legacy QuantizedTensor
+            # constructor does, so old and new keys collide correctly
+            try:
+                d["format"] = w4a16_format_for(
+                    int(d.get("group_size", 128)),
+                    symmetric=not d.get("has_zeros", False)).name
+            except (TypeError, ValueError):
+                d["format"] = DEFAULT_FORMAT
+        return cls(**d)
 
 
 # ---------------------------------------------------------------------------
@@ -152,22 +182,32 @@ class Strategy:
 
     execute(x2, qt, plan, interpret=None) -> (M, N) array, x2 always 2-D.
     cost(problem, plan) -> estimated seconds (planner ranking).
-    supports(problem) -> eligibility gate.
+    supports(problem) -> shape/dtype eligibility gate.
+    formats -> fnmatch patterns over QuantFormat names this strategy can
+    execute (e.g. ``("w4a16_*",)`` covers every group size / asym variant).
     """
 
     name: str
     execute: Callable[..., jax.Array]
     cost: Callable[[MatmulProblem, KernelPlan], float]
     supports: Callable[[MatmulProblem], bool]
+    formats: Tuple[str, ...] = ("w4a16_*",)
+
+    def supports_format(self, format_name: str) -> bool:
+        return any(fnmatch.fnmatchcase(format_name, pat)
+                   for pat in self.formats)
 
 
 _REGISTRY: Dict[str, Strategy] = {}
 
 
-def register_strategy(name: str, *, cost=None, supports=None):
+def register_strategy(name: str, *, cost=None, supports=None,
+                      formats: Tuple[str, ...] = ("w4a16_*",)):
     """Register an execute fn under ``name``; the planner picks it up with
     no dispatcher edits. ``cost`` defaults to +inf (never auto-chosen,
-    still explicitly runnable); ``supports`` defaults to always-eligible."""
+    still explicitly runnable); ``supports`` defaults to always-eligible;
+    ``formats`` defaults to the W4A16 family — a strategy for another
+    precision declares its own patterns (e.g. ``formats=("w4a8_*",)``)."""
 
     def deco(fn):
         _REGISTRY[name] = Strategy(
@@ -175,6 +215,7 @@ def register_strategy(name: str, *, cost=None, supports=None):
             execute=fn,
             cost=cost or (lambda problem, plan: float("inf")),
             supports=supports or (lambda problem: True),
+            formats=tuple(formats),
         )
         return fn
 
@@ -192,6 +233,12 @@ def get_strategy(name: str) -> Strategy:
 
 def available_strategies() -> Tuple[str, ...]:
     return tuple(_REGISTRY)
+
+
+def strategies_for_format(format_name: str) -> Tuple[str, ...]:
+    """Names of registered strategies that can execute ``format_name``."""
+    return tuple(s.name for s in _REGISTRY.values()
+                 if s.supports_format(format_name))
 
 
 # ---------------------------------------------------------------------------
@@ -274,7 +321,19 @@ def _cost_reference(problem: MatmulProblem, plan: KernelPlan) -> float:
 
 def _supports_pallas(problem: MatmulProblem) -> bool:
     # the kernels pad M and re-pick blocks, but K must be packable/grouped
-    return problem.K % 2 == 0 and problem.K % problem.group_size == 0
+    return (problem.group_size > 0 and problem.K % 2 == 0
+            and problem.K % problem.group_size == 0)
+
+
+def _cost_w4a8(problem: MatmulProblem, plan: KernelPlan) -> float:
+    """W4A8 reference path: int8 activation read (half the fp16 bytes),
+    packed int4 weight read, int32 MACs at MXU rate."""
+    M, N, K = problem.M, problem.N, problem.K
+    spec = costmodel.TPU_V5E
+    g = max(problem.group_size, 1)
+    bytes_moved = M * K + 0.5 * K * N + 4.0 * K * N / g + 2 * M * N
+    t = max((2 * M * N * K) / spec.flops, bytes_moved / spec.hbm_bw)
+    return t * problem.batch
 
 
 # ---------------------------------------------------------------------------
@@ -287,26 +346,43 @@ def _exec_out_dtype(plan: KernelPlan, x: jax.Array):
     return jnp.dtype(plan.out_dtype) if plan.out_dtype else x.dtype
 
 
-@register_strategy("reference", cost=_cost_reference)
+_FLOAT_ACT_FORMATS = ("w4a16_*", "w8a16_*")   # anything dequantize handles
+
+
+@register_strategy("reference", cost=_cost_reference,
+                   formats=_FLOAT_ACT_FORMATS)
 def _run_reference(x2, qt, plan, *, interpret=None):
     return ref.w4a16_ref(x2, qt, out_dtype=_exec_out_dtype(plan, x2))
 
 
-@register_strategy("xla", cost=_cost_xla)
-def _run_xla(x2, qt, plan, *, interpret=None):
-    # barrier pins dequantization INSIDE the enclosing (layer) loop:
-    # without it XLA's loop-invariant code motion hoists Dequant(W) for
-    # every scanned layer out of the decode loop and materializes the
-    # whole model in bf16 — silently undoing W4A16's 4× memory win
+def _pinned_qt(qt: QuantizedTensor) -> QuantizedTensor:
+    """qt behind an optimization barrier: pins dequantization INSIDE the
+    enclosing (layer) loop. Without it XLA's loop-invariant code motion
+    hoists Dequant(W) for every scanned layer out of the decode loop and
+    materializes the whole model in bf16 — silently undoing the 4× (or 2×)
+    quantized-weight memory win."""
     pinned = jax.lax.optimization_barrier(
         (qt.packed, qt.scales) + (() if qt.zeros is None else (qt.zeros,)))
-    packed, scales = pinned[0], pinned[1]
     zeros = pinned[2] if qt.zeros is not None else None
-    w = dequantize(QuantizedTensor(packed, scales, zeros,
-                                   qt.group_size, qt.out_dtype))
+    return QuantizedTensor(pinned[0], pinned[1], zeros,
+                           qt.group_size, qt.out_dtype, qt.format)
+
+
+@register_strategy("xla", cost=_cost_xla, formats=_FLOAT_ACT_FORMATS)
+def _run_xla(x2, qt, plan, *, interpret=None):
+    w = dequantize(_pinned_qt(qt))
     return jnp.dot(
         x2.astype(w.dtype), w, preferred_element_type=jnp.float32
     ).astype(_exec_out_dtype(plan, x2))
+
+
+@register_strategy("w4a8_xla", cost=_cost_w4a8, supports=_supports_pallas,
+                   formats=("w4a8_*",))
+def _run_w4a8_xla(x2, qt, plan, *, interpret=None):
+    # dynamic per-token int8 activations × int4 weights, int32 group
+    # accumulation (LiquidGEMM-style); barrier for the same reason as "xla"
+    return w4a8_matmul_ref(x2, _pinned_qt(qt)).astype(
+        _exec_out_dtype(plan, x2))
 
 
 @register_strategy("fused", cost=_cost_fused, supports=_supports_pallas)
@@ -367,13 +443,30 @@ class PlanCache:
             self.hits = self.misses = 0
 
     def save(self, path: str) -> int:
-        """Persist every cached decision; returns the entry count."""
+        """Persist every cached decision; returns the entry count.
+
+        The write is atomic (tmp file + ``os.replace``): a crash mid-save
+        can never truncate a shared plan-cache file that other runs
+        warm-start from — they see either the old or the new contents.
+        """
         with self._lock:
             entries = [{"problem": prob.to_dict(), "plan": plan.to_dict()}
                        for prob, plan in self._plans.items()]
-        with open(path, "w") as f:
-            json.dump({"version": self._VERSION, "plans": entries},
-                      f, indent=1, sort_keys=True)
+        blob = json.dumps({"version": self._VERSION, "plans": entries},
+                          indent=1, sort_keys=True)
+        d = os.path.dirname(os.path.abspath(path)) or "."
+        fd, tmp = tempfile.mkstemp(
+            dir=d, prefix=os.path.basename(path) + ".", suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(blob)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
         return len(entries)
 
     def load(self, path: str, *, merge: bool = True) -> int:
@@ -454,15 +547,26 @@ def plan_matmul(problem: MatmulProblem, *, strategy: Optional[str] = None,
                 cache: Optional[PlanCache] = None) -> KernelPlan:
     """Choose a :class:`KernelPlan` for ``problem``.
 
-    With ``strategy=None`` every registered, eligible strategy is ranked by
-    its cost model and the cheapest wins; the decision is memoized in the
-    plan cache (process-wide, JSON-persistable). A named ``strategy`` forces
-    the choice but still fills split_k/tiles heuristically. ``refine=True``
-    additionally runs the tile-search refinement (ex-autotune) for Pallas
-    strategies.
+    With ``strategy=None`` every registered strategy that supports the
+    problem's quantization format (and shape) is ranked by its cost model
+    and the cheapest wins; the decision is memoized in the plan cache
+    (process-wide, JSON-persistable). A named ``strategy`` forces the
+    choice — but a strategy/format pair the strategy doesn't declare
+    support for is refused with a ValueError, not silently mis-executed.
+    ``refine=True`` additionally runs the tile-search refinement
+    (ex-autotune) for Pallas strategies.
     """
     if strategy is not None:
-        return _default_plan(problem, get_strategy(strategy).name, refine)
+        strat = get_strategy(strategy)
+        if not strat.supports_format(problem.format):
+            eligible = list(strategies_for_format(problem.format)) or (
+                "none — register one with "
+                "@register_strategy(..., formats=...)")
+            raise ValueError(
+                f"strategy {strat.name!r} does not support quantization "
+                f"format {problem.format!r} (it supports formats matching "
+                f"{list(strat.formats)}); strategies that do: {eligible}")
+        return _default_plan(problem, strat.name, refine)
 
     cache = cache if cache is not None else PLAN_CACHE
     if use_cache and not refine:
@@ -474,15 +578,31 @@ def plan_matmul(problem: MatmulProblem, *, strategy: Optional[str] = None,
 
     best: Optional[Tuple[float, int, KernelPlan]] = None
     for order, strat in enumerate(_REGISTRY.values()):
-        if not strat.supports(problem):
+        if not strat.supports_format(problem.format) \
+                or not strat.supports(problem):
             continue
         plan = _default_plan(problem, strat.name, refine)
         score = strat.cost(problem, plan)
         if best is None or (score, order) < (best[0], best[1]):
             best = (score, order, plan)
     if best is None:
-        # nothing eligible (e.g. odd K): the pure-jnp oracle always works
-        best = (float("inf"), -1, _default_plan(problem, "reference", False))
+        # the W4A16 family always has the unconditional "reference" oracle,
+        # so reaching here means every strategy for this format rejected
+        # the shape (or none exists) — refuse loudly rather than return a
+        # plan that would crash at execute time
+        candidates = strategies_for_format(problem.format)
+        if candidates:
+            raise ValueError(
+                f"no strategy supporting format {problem.format!r} can "
+                f"execute this problem shape (M={problem.M}, N={problem.N}, "
+                f"K={problem.K}, group_size={problem.group_size}); "
+                f"{list(candidates)} rejected it — for packed-int4 formats "
+                f"K must be even and divisible by the group size")
+        raise ValueError(
+            f"no registered strategy supports quantization format "
+            f"{problem.format!r} (strategies: "
+            f"{list(available_strategies())}); register one with "
+            f"@register_strategy(..., formats=({problem.format!r},))")
     plan = best[2]
     if use_cache:
         cache.put(problem, plan)
@@ -521,8 +641,15 @@ def resolve_plan(problem: MatmulProblem, cfg=None) -> KernelPlan:
 
 def execute(plan: KernelPlan, x: jax.Array, qt: QuantizedTensor, *,
             interpret=None) -> jax.Array:
-    """Run a planned W4A16 matmul: x (..., K) → (..., N)."""
+    """Run a planned quantized matmul: x (..., K) → (..., N)."""
     strat = get_strategy(plan.strategy)
+    if not strat.supports_format(qt.format.name):
+        raise ValueError(
+            f"plan strategy {plan.strategy!r} cannot execute a "
+            f"{qt.format.name!r} tensor (it supports formats matching "
+            f"{list(strat.formats)}); re-plan with a problem built via "
+            f"MatmulProblem.from_operands, or force one of "
+            f"{list(strategies_for_format(qt.format.name))}")
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     out = strat.execute(x2, qt, plan, interpret=interpret)
@@ -551,8 +678,8 @@ def plan_for_params(params, M: int, *, refine: bool = False,
     for leaf in leaves:
         if not isinstance(leaf, QuantizedTensor):
             continue
-        K = int(leaf.packed.shape[-2]) * 2
-        N = int(leaf.packed.shape[-1])
+        K = int(leaf.K)
+        N = int(leaf.N)
         # batch=1, matching the layer-time lookup key: stacked (L, ...)
         # kernels execute as 2-D slices inside scan, so from_operands
         # builds batch=1 problems there — and batch scales every cost
@@ -562,6 +689,7 @@ def plan_for_params(params, M: int, *, refine: bool = False,
             act_dtype=str(jnp.dtype(leaf.out_dtype)),
             out_dtype=str(jnp.dtype(leaf.out_dtype)),
             has_zeros=leaf.zeros is not None,
-            backend=backend or jax.default_backend())
+            backend=backend or jax.default_backend(),
+            format=leaf.format.name)
         plans[problem.layer_key] = plan_matmul(problem, refine=refine)
     return plans

@@ -18,8 +18,9 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.configs.shapes import cache_len_for, ShapeSpec
+from repro.core import quant
 from repro.kernels import planning
-from repro.models import layers, transformer as T
+from repro.models import transformer as T
 from repro.runtime import steps as rsteps
 
 
@@ -32,6 +33,11 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--strategy", default="auto",
                     choices=["auto"] + list(planning.available_strategies()))
+    ap.add_argument("--format", default=None,
+                    help="quantization format name (see repro.core.quant."
+                         "available_formats(): w4a16_g128 | w8a16_channel "
+                         "| w4a8_g128 | any registered format); default: "
+                         "the config's quant_format")
     ap.add_argument("--plan-cache", default=None,
                     help="plan-cache JSON: loaded before serving if present, "
                          "saved (with any new decisions) afterwards")
@@ -51,17 +57,18 @@ def main(argv=None):
 
     cfg = (configs.get_reduced if args.reduced else configs.get_config)(
         args.arch)
-    cfg = dataclasses.replace(cfg, w4a16_strategy=args.strategy)
+    fmt = quant.get_format(args.format or cfg.quant_format)
+    cfg = dataclasses.replace(cfg, w4a16_strategy=args.strategy,
+                              quant_format=fmt.name)
     key = jax.random.PRNGKey(0)
     params = T.init_params(key, cfg)
     if not args.no_quant:
-        params = layers.quantize_tree(params, group_size=cfg.group_size,
-                                      min_size=0)
+        params = T.quantize_params(params, cfg, min_size=0)
         qbytes = sum(
             x.nbytes_packed() if hasattr(x, "nbytes_packed") else x.nbytes
             for x in jax.tree.leaves(
                 params, is_leaf=lambda t: hasattr(t, "nbytes_packed")))
-        print(f"[serve] {cfg.name} W4A16 ({args.strategy}); "
+        print(f"[serve] {cfg.name} {fmt.name} ({args.strategy}); "
               f"weights {qbytes/1e6:.1f} MB on disk")
         if args.strategy == "auto":
             # pre-plan the decode-regime (M=batch) GEMMs: the planner's

@@ -19,7 +19,7 @@ from repro import configs
 from repro.data import SyntheticTokenStream
 from repro.kernels import planning
 from repro.launch.presets import settings_for
-from repro.models import layers, transformer as T
+from repro.models import transformer as T
 from repro.optim import AdamWConfig, adamw_init
 from repro.runtime import steps as rsteps
 from repro.runtime.resilient import RunnerConfig, run_training
@@ -47,9 +47,13 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--plan-cache", default=None,
-                    help="plan-cache JSON: pre-plan this model's W4A16 "
+                    help="plan-cache JSON: pre-plan this model's quantized "
                          "serving GEMMs after training and persist them, so "
                          "the serve launcher starts with warm plans")
+    ap.add_argument("--format", default=None,
+                    help="quantization format for the post-training "
+                         "serving-GEMM planning pass (any registered "
+                         "QuantFormat name; default: config quant_format)")
     args = ap.parse_args(argv)
 
     if args.plan_cache and os.path.exists(args.plan_cache):
@@ -99,8 +103,8 @@ def main(argv=None):
         # quantize a throwaway copy of the trained tree to enumerate the
         # serving GEMMs, plan them at decode batch M, and persist — the
         # train→quantize→serve pipeline starts serving with warm plans
-        qparams = layers.quantize_tree(params, group_size=cfg.group_size,
-                                       min_size=0)
+        qparams = T.quantize_params(params, cfg, format=args.format,
+                                    min_size=0)
         plans = planning.plan_for_params(qparams, M=args.batch)
         n = planning.save_plan_cache(args.plan_cache)
         print(f"[train] plan cache: {len(plans)} layer GEMMs planned, "

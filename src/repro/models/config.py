@@ -39,9 +39,13 @@ class ModelConfig:
     tie_embeddings: bool = False
     dtype: Any = jnp.bfloat16
 
-    # W4A16 serving (the paper's technique, first-class)
+    # Quantized serving (the paper's W4A16 by default; any registered
+    # QuantFormat name — see repro.core.quant.available_formats())
     quantize_serve: bool = True
-    group_size: int = 128
+    quant_format: str = "w4a16_g128"
+    group_size: int = 128            # group override for the DEFAULT format
+                                     # only; other formats carry their
+                                     # grouping in their registered name
     w4a16_strategy: str = "auto"     # "auto" = cost-model planner; or any
                                      # name in planning.available_strategies()
     w4a16_plan: Any = None           # explicit KernelPlan override: a

@@ -13,7 +13,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import compat
+from repro.core import compat, quant
 from repro.core.quant import QuantizedTensor, quantize
 from repro.kernels import planning
 
@@ -91,22 +91,36 @@ def linear(p, x: jax.Array, cfg=None) -> jax.Array:
     return y
 
 
-def quantize_tree(params, *, group_size: int = 128, symmetric: bool = True,
+def quantize_tree(params, *, format=None, group_size: Optional[int] = None,
+                  symmetric: Optional[bool] = None,
                   min_size: int = 1 << 16,
                   skip_names=("embed", "lm_head", "router", "bc_proj")):
     """Convert every eligible 2-D/3-D 'kernel' leaf to a QuantizedTensor.
 
+    ``format`` names a registered :class:`~repro.core.quant.QuantFormat`
+    (default ``w4a16_g128``); the legacy ``group_size``/``symmetric``
+    kwargs derive a variant of it, so pre-format call sites are unchanged.
     3-D kernels (stacked layers or MoE experts) are quantized slice-wise via
     vmap — scales are per (layer/expert, K-group, N), matching the paper's
     per-matrix group quantization.
     """
+    base = quant.resolve_format(format)
+    if group_size is not None:
+        base = base.with_group_size(group_size)
+    if symmetric is not None:
+        base = base.with_symmetric(symmetric)
 
-    def pick_group(K: int):
+    def pick_format(K: int):
         """Adaptive group size: fall back to smaller groups for odd dims
-        (e.g. hymba's d_model=1600 is not 128-aligned but is 64-aligned)."""
-        for g in (group_size, 64, 32):
+        (e.g. hymba's d_model=1600 is not 128-aligned but is 64-aligned).
+        Channel/tensor granularities only need K packable."""
+        if base.pack_factor > 1 and K % 2:
+            return None
+        if base.scale_granularity != "group":
+            return base
+        for g in (base.group_size, 64, 32):
             if K % g == 0:
-                return g
+                return base.with_group_size(g)
         return None
 
     def visit(path, leaf):
@@ -117,11 +131,10 @@ def quantize_tree(params, *, group_size: int = 128, symmetric: bool = True,
             return leaf
         if leaf.ndim < 2 or leaf.shape[-2] * leaf.shape[-1] < min_size:
             return leaf                  # per-matrix size, not stacked size
-        g = pick_group(leaf.shape[-2])
-        if g is None:
+        fmt = pick_format(leaf.shape[-2])
+        if fmt is None:
             return leaf
-        qfn = lambda w: quantize(w, group_size=g, symmetric=symmetric,
-                                 out_dtype=leaf.dtype)
+        qfn = lambda w: quantize(w, fmt, out_dtype=leaf.dtype)
         for _ in range(leaf.ndim - 2):   # stacked layers / experts
             qfn = jax.vmap(qfn)
         return qfn(leaf)

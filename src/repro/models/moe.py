@@ -54,7 +54,8 @@ def _expert_matmul(w, x, cfg):
             act_dtype=str(jnp.dtype(x.dtype)),
             out_dtype=str(jnp.dtype(x.dtype)),
             has_zeros=kern.zeros is not None,
-            backend=jax.default_backend(), batch=int(x.shape[0]))
+            backend=jax.default_backend(), batch=int(x.shape[0]),
+            format=kern.format.name)
         plan = planning.resolve_plan(problem, cfg)
         return jax.vmap(lambda xe, qe: planning.execute(plan, xe, qe))(x, kern)
     return jnp.einsum("ecd,edf->ecf", x, kern.astype(x.dtype),

@@ -120,9 +120,19 @@ def abstract_params(cfg: ModelConfig):
         lambda: init_params(jax.random.PRNGKey(0), cfg))
 
 
-def quantize_params(params, cfg: ModelConfig):
-    """Serve-time W4A16 transform (the paper's technique applied model-wide)."""
-    return layers.quantize_tree(params, group_size=cfg.group_size)
+def quantize_params(params, cfg: ModelConfig, *, format=None,
+                    min_size: int = 1 << 16):
+    """Serve-time quantization transform (the paper's W4A16 by default;
+    ``format``/``cfg.quant_format`` selects any registered format
+    model-wide). ``cfg.group_size`` only re-groups the default format — a
+    non-default format's grouping lives in its own name. The single place
+    that derives the format/group precedence for launchers and models."""
+    from repro.core import quant
+    fmt = quant.get_format(
+        format or getattr(cfg, "quant_format", quant.DEFAULT_FORMAT))
+    gs = cfg.group_size if fmt.name == quant.DEFAULT_FORMAT else None
+    return layers.quantize_tree(params, format=fmt.name, group_size=gs,
+                                min_size=min_size)
 
 
 # ---------------------------------------------------------------------------

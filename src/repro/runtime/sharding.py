@@ -105,7 +105,8 @@ def param_shardings(params, mesh, *, fsdp: bool = False,
             return QuantizedTensor(
                 packed=mk(pk), scales=mk(sc),
                 zeros=None if leaf.zeros is None else mk(sc),
-                group_size=leaf.group_size, out_dtype=leaf.out_dtype)
+                group_size=leaf.group_size, out_dtype=leaf.out_dtype,
+                format=leaf.format)
         return NamedSharding(mesh, spec_for(names, leaf))
 
     return jax.tree_util.tree_map_with_path(

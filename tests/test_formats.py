@@ -1,0 +1,396 @@
+"""QuantFormat registry + multi-format correctness.
+
+Covers: the registry (builtins, registration, derived variants, JSON),
+format-dispatched quantize/dequantize for W8A16 (per-channel int8) and
+W4A8 (dynamic int8 activations), planner format filtering + the
+strategy/format refusal error, per-format plan caching, checkpoint format
+sidecars, and quantize_tree with a format name.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant
+from repro.core.quant import (
+    QuantFormat,
+    QuantizedTensor,
+    available_formats,
+    dequantize,
+    get_format,
+    quantize,
+    quantize_activations_int8,
+    register_format,
+    resolve_format,
+    w4a8_matmul_ref,
+    w4a16_matmul_ref,
+)
+from repro.kernels import planning
+from repro.kernels.planning import (
+    KernelPlan, MatmulProblem, execute, plan_matmul, strategies_for_format,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _w(K=256, N=64, seed=0):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=(K, N)).astype(np.float32))
+
+
+def _x(M=4, K=256, seed=1):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=(M, K)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_builtin_formats_registered():
+    names = available_formats()
+    assert len(names) >= 3
+    for name in ("w4a16_g128", "w8a16_channel", "w4a8_g128"):
+        assert name in names
+        assert get_format(name).name == name
+    assert get_format("w4a16_g128").weight_bits == 4
+    assert get_format("w8a16_channel").scale_granularity == "channel"
+    assert get_format("w4a8_g128").quantized_activations
+
+
+def test_format_json_round_trip():
+    fmt = get_format("w4a8_g128")
+    blob = json.dumps(fmt.to_dict())
+    assert QuantFormat.from_dict(json.loads(blob)) == fmt
+    # resolve accepts name / object / descriptor dict / None (the default)
+    assert resolve_format("w4a8_g128") is fmt
+    assert resolve_format(fmt) is fmt
+    assert resolve_format(fmt.to_dict()) == fmt
+    assert resolve_format(None).name == quant.DEFAULT_FORMAT
+
+
+def test_register_and_conflict():
+    fmt = QuantFormat(name="_test_w8a16_g64", weight_bits=8,
+                      packing="int8_rows", scale_granularity="group",
+                      group_size=64)
+    try:
+        assert register_format(fmt) is fmt
+        assert get_format("_test_w8a16_g64") is fmt
+        register_format(fmt)                       # identical re-register: ok
+        clash = dataclasses.replace(fmt, group_size=32)
+        with pytest.raises(ValueError, match="already registered"):
+            register_format(clash)
+        register_format(clash, overwrite=True)
+        assert get_format("_test_w8a16_g64").group_size == 32
+    finally:
+        quant._FORMAT_REGISTRY.pop("_test_w8a16_g64", None)
+
+
+def test_unknown_format_raises_with_listing():
+    with pytest.raises(ValueError, match="unknown quantization format"):
+        get_format("w2a2_nope")
+
+
+def test_derived_variants_register_on_demand():
+    g64 = get_format("w4a16_g128").with_group_size(64)
+    assert g64.name == "w4a16_g64" and g64.group_size == 64
+    assert "w4a16_g64" in available_formats()
+    asym = g64.with_symmetric(False)
+    assert asym.name == "w4a16_g64_asym" and not asym.symmetric
+    assert asym.with_symmetric(True) is g64 or \
+        asym.with_symmetric(True).name == "w4a16_g64"
+    # channel granularity has no groups: with_group_size is a no-op
+    ch = get_format("w8a16_channel")
+    assert ch.with_group_size(64) is ch
+
+
+def test_format_validation():
+    with pytest.raises(ValueError, match="packing"):
+        QuantFormat(name="bad", packing="int3_whatever")
+    with pytest.raises(ValueError, match="4-bit"):
+        QuantFormat(name="bad", weight_bits=8, packing="int4_pairs_k")
+    with pytest.raises(ValueError, match="granularity"):
+        QuantFormat(name="bad", scale_granularity="row")
+
+
+def test_legacy_constructor_infers_format():
+    """Pre-format call sites (bare group_size) get the W4A16-family shim."""
+    w = _w()
+    qt = quantize(w, group_size=64)
+    assert qt.format.name == "w4a16_g64"
+    raw = QuantizedTensor(qt.packed, qt.scales, None, 64, jnp.float32)
+    assert raw.format.name == "w4a16_g64"
+    asym = quantize(w, group_size=64, symmetric=False)
+    raw2 = QuantizedTensor(asym.packed, asym.scales, asym.zeros, 64,
+                           jnp.float32)
+    assert raw2.format.name == "w4a16_g64_asym"
+
+
+# ---------------------------------------------------------------------------
+# w8a16: per-channel int8 weights
+# ---------------------------------------------------------------------------
+
+def test_w8a16_quantize_dequantize_error_bound():
+    w = _w()
+    qt = quantize(w, "w8a16_channel")
+    assert qt.packed.shape == w.shape and qt.packed.dtype == jnp.int8
+    assert qt.scales.shape == (1, w.shape[1])
+    assert qt.group_size == w.shape[0]          # one scale row spans K
+    bound = np.asarray(quant.quantization_error_bound(qt))  # (1, N)
+    err = np.abs(np.asarray(dequantize(qt)) - np.asarray(w))
+    assert (err <= bound * 1.001 + 1e-6).all()
+    # int8 per-channel is much tighter than int4 group-wise
+    err4 = np.abs(np.asarray(dequantize(quantize(w, group_size=128)))
+                  - np.asarray(w))
+    assert err.mean() < err4.mean() / 4
+
+
+def test_w8a16_matmul_through_planner():
+    w, x = _w(), _x()
+    qt = quantize(w, "w8a16_channel")
+    problem = MatmulProblem.from_operands(x, qt)
+    assert problem.format == "w8a16_channel"
+    plan = plan_matmul(problem, use_cache=False)
+    assert plan.strategy in strategies_for_format("w8a16_channel")
+    got = np.asarray(execute(plan, x, qt))
+    want = np.asarray(x) @ np.asarray(dequantize(qt))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# w4a8: dynamic int8 activations (LiquidGEMM-style) — acceptance criterion
+# ---------------------------------------------------------------------------
+
+def test_activation_quantization_error_bound():
+    x = _x(M=8)
+    xq, xs = quantize_activations_int8(x)
+    assert xq.dtype == jnp.int8 and xs.shape == (8, 1)
+    err = np.abs(np.asarray(xq, np.float32) * np.asarray(xs) - np.asarray(x))
+    assert (err <= np.asarray(xs) / 2 * 1.001 + 1e-6).all()
+
+
+@pytest.mark.parametrize("symmetric", [True, False])
+def test_w4a8_matches_its_exact_decomposition(symmetric):
+    """w4a8_matmul_ref == (xs * x_q) @ Dequant(W) up to fp32 association —
+    the integer group accumulation reorders no math."""
+    w, x = _w(), _x()
+    qt = quantize(w, "w4a8_g128", symmetric=symmetric)
+    got = np.asarray(w4a8_matmul_ref(x, qt))
+    xq, xs = quantize_activations_int8(x)
+    want = (np.asarray(xq, np.float32) * np.asarray(xs)) \
+        @ np.asarray(dequantize(qt), np.float32)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_w4a8_close_to_float_reference_within_quant_bounds():
+    """Acceptance: w4a8_g128 vs the dense float GEMM, bounded by the
+    analytic weight + activation quantization error."""
+    w, x = _w(K=512), _x(K=512)
+    qt = quantize(w, "w4a8_g128")
+    got = np.asarray(w4a8_matmul_ref(x, qt))
+    dense = np.asarray(x) @ np.asarray(w)
+    # |y - x@w| <= |x| @ wbound + xbound_row * sum_k |wdeq|  (elementwise)
+    wbound = np.repeat(np.asarray(quant.quantization_error_bound(qt)),
+                       qt.group_size, axis=0)               # (K, N)
+    _, xs = quantize_activations_int8(x)
+    xbound = np.asarray(xs) / 2                              # (M, 1)
+    wdeq = np.abs(np.asarray(dequantize(qt), np.float32))
+    bound = np.abs(np.asarray(x)) @ wbound + xbound * wdeq.sum(0)[None]
+    assert (np.abs(got - dense) <= bound * 1.001 + 1e-4).all()
+    # and the aggregate error stays at int4-noise level (the weight-quant
+    # term dominates: ~s/2 per element ≈ 12-15% mean-relative on N(0,1)
+    # data), i.e. W4A8 is no worse than W4A16 on the same weights
+    rel = np.abs(got - dense).mean() / np.abs(dense).mean()
+    w16 = np.asarray(w4a16_matmul_ref(x, quantize(w, group_size=128)))
+    rel16 = np.abs(w16 - dense).mean() / np.abs(dense).mean()
+    assert rel < 0.25, rel
+    assert rel < rel16 * 1.25, (rel, rel16)
+
+
+def test_w4a8_through_planner_and_leading_dims():
+    w, x = _w(), _x(M=6)
+    qt = quantize(w, "w4a8_g128")
+    problem = MatmulProblem.from_operands(x, qt)
+    plan = plan_matmul(problem, use_cache=False)
+    assert plan.strategy == "w4a8_xla"
+    got = execute(plan, x.reshape(2, 3, -1), qt)
+    assert got.shape == (2, 3, qt.N)
+    np.testing.assert_allclose(
+        np.asarray(got).reshape(6, -1), np.asarray(w4a8_matmul_ref(x, qt)),
+        rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# planner format filtering — acceptance criterion
+# ---------------------------------------------------------------------------
+
+def test_plan_matmul_refuses_unsupported_strategy_format_pair():
+    problem = MatmulProblem(M=4, N=64, K=256, format="w4a8_g128")
+    for strategy in ("fused", "decoupled", "xla", "reference"):
+        with pytest.raises(ValueError) as ei:
+            plan_matmul(problem, strategy=strategy)
+        msg = str(ei.value)
+        assert "w4a8_g128" in msg and strategy in msg
+        assert "w4a8_xla" in msg            # ...and tells you what would work
+    # pallas strategies also refuse the float-act w8a16 (wrong packing)
+    with pytest.raises(ValueError, match="does not support"):
+        plan_matmul(MatmulProblem(M=4, N=64, K=256, group_size=256,
+                                  format="w8a16_channel"), strategy="fused")
+
+
+def test_execute_refuses_mismatched_plan():
+    w, x = _w(), _x()
+    qt = quantize(w, "w4a8_g128")
+    with pytest.raises(ValueError, match="cannot execute"):
+        execute(KernelPlan(strategy="fused"), x, qt)
+
+
+def test_planner_refuses_shape_ineligible_w4a8():
+    """K not group-divisible: no w4a8 strategy can execute, and unlike the
+    W4A16 family there is no unconditional oracle — the planner must refuse
+    at plan time, not hand back a plan that crashes at execute time."""
+    problem = MatmulProblem(M=4, N=64, K=250, group_size=128,
+                            format="w4a8_g128")
+    with pytest.raises(ValueError, match="can execute this problem shape"):
+        plan_matmul(problem, use_cache=False)
+
+
+def test_planner_errors_when_no_strategy_supports_format():
+    fmt = register_format(QuantFormat(
+        name="_test_w8a16_orphan", weight_bits=8, packing="int8_rows",
+        scale_granularity="tensor", group_size=0))
+    try:
+        with pytest.raises(ValueError, match="no registered strategy"):
+            plan_matmul(MatmulProblem(M=4, N=64, K=256,
+                                      format="_test_w8a16_orphan"),
+                        use_cache=False)
+    finally:
+        quant._FORMAT_REGISTRY.pop("_test_w8a16_orphan", None)
+
+
+def test_plans_cache_per_format():
+    cache = planning.PlanCache()
+    base = dict(M=4, N=64, K=256, group_size=128)
+    a = MatmulProblem(**base, format="w4a16_g128")
+    b = MatmulProblem(**base, format="w4a8_g128")
+    assert a != b
+    plan_matmul(a, cache=cache)
+    plan_matmul(b, cache=cache)
+    assert len(cache) == 2 and cache.hits == 0
+
+
+def test_legacy_plan_cache_entries_get_default_format(tmp_path):
+    """A pre-format plan-cache JSON (no "format" key) loads through the
+    default-format shim and keys identically to new W4A16 problems."""
+    old_entry = {
+        "problem": {"M": 4, "N": 64, "K": 256, "group_size": 64,
+                    "act_dtype": "float32", "out_dtype": "float32",
+                    "has_zeros": False, "backend": "cpu", "batch": 1},
+        "plan": KernelPlan(strategy="xla").to_dict(),
+    }
+    path = tmp_path / "old.json"
+    path.write_text(json.dumps({"version": 1, "plans": [old_entry]}))
+    cache = planning.PlanCache()
+    assert cache.load(str(path)) == 1
+    new_key = MatmulProblem(M=4, N=64, K=256, group_size=64,
+                            act_dtype="float32", out_dtype="float32",
+                            format="w4a16_g64")
+    assert cache.get(new_key) == KernelPlan(strategy="xla")
+
+
+def test_custom_strategy_with_format_patterns():
+    name = "_test_fmt_strategy"
+    try:
+        @planning.register_strategy(name, cost=lambda p, pl: 0.0,
+                                    formats=("w4a8_*",))
+        def _run(x2, qt, plan, *, interpret=None):
+            return w4a8_matmul_ref(x2, qt)
+
+        assert name in strategies_for_format("w4a8_g128")
+        assert name not in strategies_for_format("w4a16_g128")
+        # irresistible cost: the planner picks it for w4a8 problems only
+        prob = MatmulProblem(M=4, N=64, K=256, format="w4a8_g128")
+        assert plan_matmul(prob, use_cache=False).strategy == name
+        prob16 = MatmulProblem(M=4, N=64, K=256, format="w4a16_g128")
+        assert plan_matmul(prob16, use_cache=False).strategy != name
+    finally:
+        planning._REGISTRY.pop(name, None)
+
+
+# ---------------------------------------------------------------------------
+# quantize_tree with a format / end-to-end layer
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt_name,max_rel", [("w8a16_channel", 0.02),
+                                              ("w4a8_g128", 0.25)])
+def test_quantize_tree_with_format(fmt_name, max_rel):
+    params = {"proj": {"kernel": _w(256, 64)},
+              "stack": {"kernel": jnp.stack([_w(256, 64, s) for s in (1, 2)])}}
+    from repro.models import layers
+    qp = layers.quantize_tree(params, format=fmt_name, group_size=128,
+                              min_size=0)
+    for leaf in jax.tree_util.tree_leaves(
+            qp, is_leaf=lambda t: isinstance(t, QuantizedTensor)):
+        assert isinstance(leaf, QuantizedTensor)
+        assert leaf.format.name == fmt_name
+    # the quantized linear still runs through the planned path
+    x = _x()
+    y = layers.linear(qp["proj"], x)
+    want = np.asarray(x) @ np.asarray(params["proj"]["kernel"])
+    rel = np.abs(np.asarray(y, np.float32) - want).mean() / np.abs(want).mean()
+    assert y.shape == (4, 64) and rel < max_rel, rel
+
+
+def test_quantize_tree_adaptive_group_keeps_format_family():
+    from repro.models import layers
+    params = {"odd": {"kernel": _w(192, 64)}}       # 192 % 128 != 0, % 64 == 0
+    qp = layers.quantize_tree(params, format="w4a8_g128", min_size=0)
+    assert qp["odd"]["kernel"].format.name == "w4a8_g64"
+    assert qp["odd"]["kernel"].format.quantized_activations
+
+
+# ---------------------------------------------------------------------------
+# checkpoint format sidecars
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_round_trips_formats(tmp_path):
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+    tree = {"a": quantize(_w(), "w8a16_channel"),
+            "b": quantize(_w(seed=3), "w4a8_g128", symmetric=False),
+            "dense": jnp.ones((4,), jnp.float32)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    out, step, _ = restore_checkpoint(str(tmp_path), tree)
+    assert step == 1
+    assert out["a"].format.name == "w8a16_channel"
+    assert out["b"].format.name == "w4a8_g128_asym"
+    np.testing.assert_array_equal(np.asarray(out["a"].packed),
+                                  np.asarray(tree["a"].packed))
+    np.testing.assert_array_equal(np.asarray(out["b"].zeros),
+                                  np.asarray(tree["b"].zeros))
+
+
+def test_checkpoint_format_mismatch_fails_loudly(tmp_path):
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+    tree = {"q": quantize(_w(), "w8a16_channel")}
+    save_checkpoint(str(tmp_path), 1, tree)
+    like = {"q": quantize(_w(), "w4a16_g128")}
+    with pytest.raises(ValueError, match="format mismatch") as ei:
+        restore_checkpoint(str(tmp_path), like)
+    assert "w8a16_channel" in str(ei.value) and "w4a16_g128" in str(ei.value)
+
+
+def test_checkpoint_quantized_vs_dense_template_mismatch(tmp_path):
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+    # dense checkpoint into a quantized template
+    save_checkpoint(str(tmp_path / "d"), 1, {"q": _w()})
+    with pytest.raises(ValueError, match="dense"):
+        restore_checkpoint(str(tmp_path / "d"),
+                           {"q": quantize(_w(), "w4a16_g128")})
+    # quantized checkpoint into a dense template
+    save_checkpoint(str(tmp_path / "q"), 1,
+                    {"q": quantize(_w(), "w4a16_g128")})
+    with pytest.raises(ValueError, match="quantized"):
+        restore_checkpoint(str(tmp_path / "q"), {"q": _w()})

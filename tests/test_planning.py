@@ -60,10 +60,14 @@ def test_kernel_plan_json_round_trip():
 # ---------------------------------------------------------------------------
 
 def test_registered_strategies_agree_with_oracle():
-    """Every registered strategy matches ref.w4a16_ref within tolerance."""
+    """Every strategy supporting the tensor's format matches ref.w4a16_ref
+    within tolerance (format-incompatible ones are refused — see
+    tests/test_formats.py)."""
     x, qt = _operands()
     want = np.asarray(ref.w4a16_ref(x, qt))
-    for name in planning.available_strategies():
+    names = planning.strategies_for_format(qt.format.name)
+    assert set(names) >= {"fused", "decoupled", "xla", "reference"}
+    for name in names:
         plan = plan_matmul(MatmulProblem.from_operands(x, qt), strategy=name)
         got = execute(plan, x, qt, interpret=True)
         np.testing.assert_allclose(np.asarray(got), want,
@@ -170,6 +174,31 @@ def test_plan_cache_hit_miss_and_persistence(tmp_path):
     assert fresh.load(str(path)) == 1
     assert fresh.get(problem) == p1                      # survives the disk trip
     assert fresh.hits == 1
+
+
+def test_plan_cache_save_is_atomic(tmp_path, monkeypatch):
+    """A crash mid-save must never truncate the shared plan-cache JSON:
+    the write goes to a tmp file and lands via os.replace."""
+    path = tmp_path / "plans.json"
+    cache = PlanCache()
+    cache.put(MatmulProblem(M=1, N=128, K=256), KernelPlan(strategy="xla"))
+    cache.save(str(path))
+    before = path.read_text()
+    assert PlanCache().load(str(path)) == 1
+
+    # serialization blowing up leaves the previous file byte-identical
+    cache.put(MatmulProblem(M=2, N=128, K=256), KernelPlan(strategy="xla"))
+    monkeypatch.setattr(planning.json, "dumps",
+                        lambda *a, **k: (_ for _ in ()).throw(OSError("disk")))
+    with pytest.raises(OSError):
+        cache.save(str(path))
+    monkeypatch.undo()
+    assert path.read_text() == before
+    # no tmp litter either way
+    assert [p.name for p in tmp_path.iterdir()] == ["plans.json"]
+    # and a clean save overwrites atomically with the new contents
+    assert cache.save(str(path)) == 2
+    assert PlanCache().load(str(path)) == 2
 
 
 def test_refine_bypasses_stale_cache_hit():

@@ -75,6 +75,43 @@ def test_quantize_rejects_bad_group():
         quant.quantize(w, group_size=64)
 
 
+@pytest.mark.parametrize("seed,skew", [(0, "lognormal"), (1, "shifted"),
+                                       (2, "bimodal")])
+def test_asymmetric_skewed_distributions(seed, skew):
+    """Asymmetric (zeros != None) correctness on skewed weights: the
+    quantize→dequantize error respects the s/2 bound elementwise, and
+    w4a16_matmul_ref stays within the induced |x| @ (s/2) matmul bound of
+    the dense product."""
+    rng = np.random.default_rng(seed)
+    K, N, g = 256, 32, 64
+    if skew == "lognormal":
+        w = rng.lognormal(0.0, 0.5, size=(K, N))
+    elif skew == "shifted":
+        w = rng.normal(3.0, 0.25, size=(K, N))      # far from zero
+    else:
+        w = np.where(rng.random((K, N)) < 0.5,
+                     rng.normal(-2.0, 0.1, (K, N)),
+                     rng.normal(5.0, 0.1, (K, N)))
+    w = jnp.asarray(w.astype(np.float32))
+    qt = quant.quantize(w, group_size=g, symmetric=False)
+    assert qt.zeros is not None
+
+    wd = np.asarray(quant.dequantize(qt))
+    bound = np.repeat(np.asarray(quant.quantization_error_bound(qt)),
+                      g, axis=0)
+    assert (np.abs(wd - np.asarray(w)) <= bound * 1.001 + 1e-6).all()
+
+    x = jnp.asarray(rng.normal(size=(8, K)).astype(np.float32))
+    y = np.asarray(quant.w4a16_matmul_ref(x, qt))
+    dense = np.asarray(x) @ np.asarray(w)
+    mm_bound = np.abs(np.asarray(x)) @ bound
+    assert (np.abs(y - dense) <= mm_bound * 1.001 + 1e-3).all()
+    # and asymmetric beats symmetric on these skewed ranges
+    err_sym = np.abs(np.asarray(quant.dequantize(
+        quant.quantize(w, group_size=g))) - np.asarray(w)).mean()
+    assert np.abs(wd - np.asarray(w)).mean() < err_sym
+
+
 def test_zero_point_asymmetric():
     """Asymmetric quantization recovers a strictly positive weight matrix
     better than symmetric (the zero-point earns its storage)."""
