@@ -2,8 +2,9 @@
 
     PYTHONPATH=src python -m benchmarks.run            # all benches
     PYTHONPATH=src python -m benchmarks.run fig2 fig3  # a subset
-    PYTHONPATH=src python -m benchmarks.run --quick    # CI perf snapshot
-                                                       # -> BENCH_quickstart.json
+    PYTHONPATH=src python -m benchmarks.run --quick    # CI perf snapshot ->
+                                                       # BENCH_quickstart.json
+                                                       # + BENCH_formats.json
 
 Prints ``name,us_per_call,derived`` CSV rows per the repo convention.
 Wall-clock rows are CPU interpret-mode trends (kernel-correctness-level
@@ -137,9 +138,10 @@ def bench_plans():
                 out_dtype="bfloat16", backend="tpu")
             plan = planning.plan_matmul(problem, use_cache=False)
             # each strategy costed against ITS OWN plan (split_k etc.) —
-            # the comparison the planner actually ran
+            # the comparison the planner actually ran (format-eligible
+            # strategies only; forcing a mismatched pair is refused)
             per = {s: planning.plan_matmul(problem, strategy=s)
-                   for s in planning.available_strategies()}
+                   for s in planning.strategies_for_format(problem.format)}
             costs = ";".join(
                 f"{s}={planning.get_strategy(s).cost(problem, p) * 1e6:.1f}us"
                 for s, p in per.items())
@@ -203,12 +205,60 @@ def bench_quick(out_path: str = "BENCH_quickstart.json") -> dict:
     return blob
 
 
+# ---------------------------------------------------------------------------
+# Fused-format sweep: the three Pallas fused kernels (w4a16/w8a16/w4a8) on
+# the same shapes, persisted as BENCH_formats.json so the CI perf
+# trajectory covers every format kernel from day one
+# ---------------------------------------------------------------------------
+
+_FUSED_BY_FORMAT = {
+    "w4a16_g128": "fused",
+    "w8a16_channel": "w8a16_fused",
+    "w4a8_g128": "w4a8_fused",
+}
+
+
+def bench_formats(out_path: str = "BENCH_formats.json") -> dict:
+    """Wall-clock of each format's fused Pallas kernel (interpret mode off
+    TPU) next to the planner's pick for that format, per shape cell."""
+    print("# formats: name,us_per_call,derived(GB/s)")
+    key = jax.random.PRNGKey(0)
+    cells = []
+    for fmt_name, fused_strategy in _FUSED_BY_FORMAT.items():
+        fmt = quant.get_format(fmt_name)
+        for (N, K) in [(512, 2048)]:
+            w = jax.random.normal(key, (K, N), jnp.float32)
+            qt = quantize(w, fmt, out_dtype=jnp.bfloat16)
+            for M in (1, 16):
+                x = jax.random.normal(key, (M, K), jnp.bfloat16)
+                problem = planning.MatmulProblem.from_operands(x, qt)
+                plan = planning.plan_matmul(problem, strategy=fused_strategy)
+                t_us = _time(lambda: planning.execute(
+                    plan, x, qt, interpret=True))
+                moved = qt.nbytes_packed() + x.nbytes + M * N * 2
+                gbps = moved / (t_us * 1e-6) / 1e9
+                picked = planning.plan_matmul(problem, use_cache=False)
+                name = f"formats/{fmt_name}/{fused_strategy}/N{N}_K{K}_M{M}"
+                print(f"{name},{t_us:.1f},{gbps:.2f}")
+                cells.append({
+                    "name": name, "format": fmt_name, "M": M, "N": N, "K": K,
+                    "strategy": fused_strategy,
+                    "planner_pick": picked.strategy,
+                    "ms": round(t_us / 1e3, 4), "gbps": round(gbps, 3)})
+    blob = {"backend": jax.default_backend(), "cells": cells}
+    with open(out_path, "w") as f:
+        json.dump(blob, f, indent=1, sort_keys=True)
+    print(f"# formats: wrote {len(cells)} cells -> {out_path}")
+    return blob
+
+
 BENCHES = {
     "fig2": bench_fig2_splitk_vs_dataparallel,
     "fig3": bench_fig3_w4a16_vs_fp16,
     "kernels": bench_kernel_walltime,
     "capacity": bench_capacity,
     "plans": bench_plans,
+    "formats": bench_formats,
 }
 
 
@@ -217,8 +267,9 @@ def main(argv=None) -> None:
     ap.add_argument("benches", nargs="*", metavar="bench",
                     help=f"subset of {list(BENCHES)} (default: all)")
     ap.add_argument("--quick", action="store_true",
-                    help="run the quick perf snapshot and write "
-                         "BENCH_quickstart.json (the CI artifact)")
+                    help="run the quick perf snapshot and the fused-format "
+                         "sweep, writing BENCH_quickstart.json and "
+                         "BENCH_formats.json (the CI artifacts)")
     ap.add_argument("--format", default=quant.DEFAULT_FORMAT,
                     help="QuantFormat name for quantized benches "
                          "(w4a16_g128 | w8a16_channel | w4a8_g128 | ...)")
@@ -230,6 +281,7 @@ def main(argv=None) -> None:
     BENCH_FORMAT = quant.get_format(args.format).name
     if args.quick:
         bench_quick(args.out)
+        bench_formats()
         return
     for name in args.benches or list(BENCHES):
         if name not in BENCHES:

@@ -182,3 +182,20 @@ def fp16_time_tpu(M: int, N: int, K: int,
                   spec: TPUv5eSpec = TPU_V5E) -> float:
     traffic = 2 * M * K + 2 * K * N + 2 * M * N
     return max((2 * M * N * K) / spec.flops, traffic / spec.hbm_bw)
+
+
+def w8a16_time_tpu_fused(M: int, N: int, K: int,
+                         spec: TPUv5eSpec = TPU_V5E) -> float:
+    """Fused per-channel INT8 kernel: int8 weight rows cross HBM once
+    (K·N bytes, half of fp16) plus one fp32 scale row; dequant in VMEM."""
+    traffic = 2 * M * K + 1.0 * K * N + 4 * N + 2 * M * N
+    return max((2 * M * N * K) / spec.flops, traffic / spec.hbm_bw)
+
+
+def w4a8_time_tpu_fused(M: int, N: int, K: int, *, group: int = 128,
+                        spec: TPUv5eSpec = TPU_V5E) -> float:
+    """Fused W4A8 kernel: int8 activations (M·K bytes, half of fp16),
+    packed int4 weights (K·N/2) + fp32 group scales; int8×int8 MXU dots at
+    twice the bf16 MAC rate (v5e int8 peak is 2× bf16)."""
+    traffic = M * K + 0.5 * K * N + 4.0 * K * N / max(group, 1) + 2 * M * N
+    return max((2 * M * N * K) / (2 * spec.flops), traffic / spec.hbm_bw)

@@ -319,6 +319,15 @@ def unpack_int4(packed: jax.Array) -> jax.Array:
     return jnp.stack([lo, hi], axis=1).reshape(2 * k2, n)
 
 
+def unpack_int8_rows(packed: jax.Array) -> jax.Array:
+    """The ``int8_rows`` unpack: weight rows are stored directly as int8.
+
+    Named for symmetry with :func:`unpack_int4` so format-generic code can
+    dispatch by packing without special-casing the identity layout.
+    """
+    return packed.astype(jnp.int8)
+
+
 def pack_weights(q: jax.Array, fmt: FormatLike = None) -> jax.Array:
     """Pack integer weight values per the format's layout."""
     fmt = resolve_format(fmt)
@@ -332,7 +341,26 @@ def unpack_weights(packed: jax.Array, fmt: FormatLike = None) -> jax.Array:
     fmt = resolve_format(fmt)
     if fmt.packing == "int4_pairs_k":
         return unpack_int4(packed)
-    return packed.astype(jnp.int8)
+    return unpack_int8_rows(packed)
+
+
+def per_channel_scales(qt: "QuantizedTensor"):
+    """``(scales, zeros)`` broadcast to the (1, N) per-channel layout.
+
+    Channel-granular scales are stored as (1, N) and pass through; tensor-
+    granular (1, 1) scales broadcast across N so per-channel kernels can
+    block them along the lane dimension. Group-granular tensors are
+    refused — their scales vary along K and need the grouped kernels.
+    """
+    if qt.format.scale_granularity == "group":
+        raise ValueError(
+            f"format {qt.format.name!r} has group-granular scales; "
+            f"per-channel kernels need channel or tensor granularity")
+    N = qt.N
+    scales = jnp.broadcast_to(qt.scales, (1, N))
+    zeros = None if qt.zeros is None \
+        else jnp.broadcast_to(qt.zeros, (1, N))
+    return scales, zeros
 
 
 # ---------------------------------------------------------------------------

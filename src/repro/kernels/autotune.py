@@ -19,19 +19,13 @@ from typing import Tuple
 from repro.core.costmodel import TPU_V5E
 from repro.kernels import common
 
-VMEM_BUDGET = 96 * 1024 * 1024     # leave headroom of the ~128MB v5e VMEM
+# Both re-exported from kernels/common.py — the one budget and working-set
+# model, shared with the template's block chooser (template.choose_blocks),
+# which enforces the budget at kernel-launch time, not just here.
+VMEM_BUDGET = common.VMEM_BUDGET
+vmem_working_set = common.vmem_working_set
+
 NUM_PARALLEL = 2                   # TensorCores per chip (megacore)
-
-
-def vmem_working_set(bm: int, bn: int, bk: int, group: int,
-                     act_bytes: int = 2) -> int:
-    """Bytes resident per grid step (double-buffered ins + fp32 acc)."""
-    x_blk = bm * bk * act_bytes
-    w_blk = (bk // 2) * bn                 # packed int4
-    s_blk = max(1, bk // group) * bn * 4   # scales fp32
-    deq = bk * bn * act_bytes              # dequantized tile feeding the MXU
-    acc = bm * bn * 4
-    return 2 * (x_blk + w_blk + s_blk) + deq + acc
 
 
 def _score(M, N, K, bm, bn, bk, split_k):

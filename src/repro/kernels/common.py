@@ -11,7 +11,31 @@ import jax.numpy as jnp
 
 LANE = 128          # TPU lane width — minor dim of every block
 SUBLANE = 8         # fp32 sublane; bf16 is 16 but 8 keeps blocks legal
-VMEM_BUDGET = 96 * 1024 * 1024  # generous interpret-mode budget; real TPU ~128MB v5e? use 96MB guard
+
+# The one VMEM budget (leave headroom off the ~128MB v5e VMEM). Both the
+# autotuner's candidate ranking and the template's block chooser
+# (template.choose_blocks) enforce it through vmem_working_set below.
+VMEM_BUDGET = 96 * 1024 * 1024
+
+
+def vmem_working_set(bm: int, bn: int, bk: int, group: int,
+                     act_bytes: int = 2, weight_elt_bytes: float = 0.5,
+                     has_scales: bool = True,
+                     dequant_tile: bool = True) -> int:
+    """Bytes resident per grid step (double-buffered ins + fp32 acc).
+
+    Defaults describe the fused W4A16 kernel (packed int4 weights at 0.5
+    bytes/element, fp32 group scales, a dequantized tile feeding the MXU).
+    Other weight stages override: dense GEMM has ``weight_elt_bytes=
+    act_bytes`` and neither scales nor a dequant tile; per-channel INT8 has
+    ``weight_elt_bytes=1``.
+    """
+    x_blk = bm * bk * act_bytes
+    w_blk = int(bk * bn * weight_elt_bytes)
+    s_blk = max(1, bk // max(group, 1)) * bn * 4 if has_scales else 0
+    deq = bk * bn * act_bytes if dequant_tile else 0
+    acc = bm * bn * 4
+    return 2 * (x_blk + w_blk + s_blk) + deq + acc
 
 
 def is_cpu() -> bool:
@@ -66,6 +90,23 @@ def compiler_params(dimension_semantics):
         return None
 
 
+def unpack_int4_block(packed) -> jax.Array:
+    """In-VMEM INT4→INT8 unpack of one packed weight block (no scaling).
+
+    packed : (bk//2, bn) int8 ref/array — two nibbles per byte along K
+    returns: (bk, bn) int8 in [-8, 7]
+
+    Shift-based sign extension lowers to cheap VPU ops; the raw int8 tile
+    either feeds a float dequant (:func:`dequant_block`) or goes straight
+    into an int8×int8 MXU dot (the W4A8 contraction stage).
+    """
+    b = packed[...]
+    lo = jnp.right_shift(jnp.left_shift(b, 4), 4)   # sign-extend low nibble
+    hi = jnp.right_shift(b, 4)                      # arithmetic → sign-extended
+    k2, bn = b.shape
+    return jnp.stack([lo, hi], axis=1).reshape(2 * k2, bn)
+
+
 def dequant_block(packed, scales, zeros, repeat: int, compute_dtype):
     """In-VMEM INT4→float dequant of one weight block (the AIV role, fused).
 
@@ -74,12 +115,22 @@ def dequant_block(packed, scales, zeros, repeat: int, compute_dtype):
     zeros  : same shape as scales, or None (symmetric)
     returns: (bk, bn) compute_dtype
     """
-    b = packed[...]
-    lo = jnp.right_shift(jnp.left_shift(b, 4), 4)   # sign-extend low nibble
-    hi = jnp.right_shift(b, 4)                      # arithmetic → sign-extended
-    k2, bn = b.shape
-    q = jnp.stack([lo, hi], axis=1).reshape(2 * k2, bn).astype(jnp.float32)
+    q = unpack_int4_block(packed).astype(jnp.float32)
     s = jnp.repeat(scales[...].astype(jnp.float32), repeat, axis=0)
     if zeros is not None:
         q = q - jnp.repeat(zeros[...].astype(jnp.float32), repeat, axis=0)
     return (q * s).astype(compute_dtype)
+
+
+def dequant_channel_block(rows, scales, zeros, compute_dtype):
+    """In-VMEM per-channel INT8→float dequant of one weight block.
+
+    rows   : (bk, bn) int8 ref/array — weight rows stored directly
+    scales : (1, bn) float — one scale per output channel
+    zeros  : same shape as scales, or None (symmetric)
+    returns: (bk, bn) compute_dtype
+    """
+    q = rows[...].astype(jnp.float32)
+    if zeros is not None:
+        q = q - zeros[...].astype(jnp.float32)
+    return (q * scales[...].astype(jnp.float32)).astype(compute_dtype)

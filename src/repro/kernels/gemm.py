@@ -1,34 +1,17 @@
-"""Native FP16/BF16 tiled GEMM Pallas kernel — the "PyTorch FP16×FP16" baseline.
+"""Native FP16/BF16 tiled GEMM — the "PyTorch FP16×FP16" baseline.
 
-Grid ``(M/bm, N/bn, K/bk)``, k innermost; fp32 accumulation in a VMEM scratch
-(the L0C analogue), downcast on the final k step.
+A thin composition over the stage template (kernels/template.py):
+identity weight stage + float MXU contraction, data-parallel launch.
+Grid ``(M/bm, N/bn, K/bk)``, k innermost; fp32 accumulation in a VMEM
+scratch (the L0C analogue), downcast on the final k step.
 """
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import common
-
-
-def _gemm_kernel(x_ref, w_ref, o_ref, acc_ref):
-    k = pl.program_id(2)
-
-    @pl.when(k == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    acc_ref[...] += jnp.dot(
-        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
-    )
-
-    @pl.when(k == pl.num_programs(2) - 1)
-    def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+from repro.kernels import template
 
 
 @functools.partial(
@@ -46,36 +29,14 @@ def gemm(
     interpret=None,
 ) -> jax.Array:
     """``x @ w`` with explicit BlockSpec VMEM tiling. x:(M,K), w:(K,N)."""
-    out_dtype = out_dtype or x.dtype
-    interpret = common.resolve_interpret(interpret)
-    M, K = x.shape
     K2, N = w.shape
-    assert K == K2, (x.shape, w.shape)
-
-    bm = common.largest_divisor(M, block_m) if M % common.SUBLANE == 0 else M
-    if M % common.SUBLANE:
-        x = common.pad_dim(x, 0, common.SUBLANE)
-        Mp = x.shape[0]
-        bm = common.largest_divisor(Mp, block_m)
-    else:
-        Mp = M
-    bn = common.pick_block(N, block_n)
-    bk = common.pick_block(K, block_k)
-
-    grid = (Mp // bm, N // bn, K // bk)
-    out = pl.pallas_call(
-        _gemm_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
-            pl.BlockSpec((bk, bn), lambda m, n, k: (k, n)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
-        out_shape=jax.ShapeDtypeStruct((Mp, N), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=common.compiler_params(
-            ("parallel", "parallel", "arbitrary")
-        ),
+    assert x.shape[1] == K2, (x.shape, w.shape)
+    return template.tiled_matmul(
+        x,
+        template.DenseWeight(w),
+        template.FloatContraction(),
+        N=N,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        out_dtype=out_dtype or x.dtype,
         interpret=interpret,
-    )(x, w)
-    return out[:M]
+    )

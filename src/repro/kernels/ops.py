@@ -13,13 +13,19 @@ New code should use the primary path directly::
 Strategies (all registered in planning.py — add more with
 ``@register_strategy``, no dispatcher edits needed):
 
-  "fused"     — TPU-native in-VMEM dequant (beyond-paper; wins on TPU)
-  "decoupled" — paper-faithful 3-phase Ascend pipeline through HBM
-  "reference" — pure-jnp oracle (XLA fuses as it pleases)
-  "xla"       — dequantize once via XLA then a single jnp.dot
-  "w4a8_xla"  — dynamic int8-activation reference path (w4a8_* formats)
-  "auto"      — cost-model planner ranks every registered strategy that
-                supports the tensor's QuantFormat (see core/quant.py)
+  "fused"       — TPU-native in-VMEM dequant (beyond-paper; wins on TPU)
+  "decoupled"   — paper-faithful 3-phase Ascend pipeline through HBM
+  "reference"   — pure-jnp oracle (XLA fuses as it pleases)
+  "xla"         — dequantize once via XLA then a single jnp.dot
+  "w8a16_fused" — per-channel INT8 dequant in VMEM (w8a16_channel formats)
+  "w4a8_xla"    — dynamic int8-activation reference path (w4a8_* formats)
+  "w4a8_fused"  — int8 MXU dot + int32 accumulate Pallas kernel (w4a8_*)
+  "auto"        — cost-model planner ranks every registered strategy that
+                  supports the tensor's QuantFormat (see core/quant.py)
+
+Every Pallas strategy above is a stage composition over
+``kernels/template.py`` — see docs/kernels.md for the stage architecture
+and the add-a-format recipe.
 """
 from __future__ import annotations
 
@@ -38,10 +44,13 @@ from repro.kernels.w4a16_decoupled import (
     splitk_gemm,
     w4a16_decoupled,
 )
+from repro.kernels.w4a8_fused import w4a8_fused
 from repro.kernels.w4a16_fused import w4a16_fused
+from repro.kernels.w8a16_fused import w8a16_fused
 
 __all__ = [
     "w4a16_matmul", "gemm", "w4a16_fused", "w4a16_decoupled",
+    "w8a16_fused", "w4a8_fused",
     "dequant_w4", "splitk_gemm", "reduce_partials", "choose_split_k",
 ]
 

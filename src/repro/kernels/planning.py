@@ -57,8 +57,10 @@ from repro.core.quant import (
     w4a16_format_for,
 )
 from repro.kernels import ref
+from repro.kernels.w4a8_fused import w4a8_fused
 from repro.kernels.w4a16_decoupled import w4a16_decoupled
 from repro.kernels.w4a16_fused import w4a16_fused
+from repro.kernels.w8a16_fused import w8a16_fused
 
 __all__ = [
     "MatmulProblem", "KernelPlan", "Strategy",
@@ -192,6 +194,8 @@ class Strategy:
     cost: Callable[[MatmulProblem, KernelPlan], float]
     supports: Callable[[MatmulProblem], bool]
     formats: Tuple[str, ...] = ("w4a16_*",)
+    splittable: bool = False    # honors plan.split_k / tile refinement
+                                # (the tiled Pallas kernels; XLA paths don't)
 
     def supports_format(self, format_name: str) -> bool:
         return any(fnmatch.fnmatchcase(format_name, pat)
@@ -202,12 +206,15 @@ _REGISTRY: Dict[str, Strategy] = {}
 
 
 def register_strategy(name: str, *, cost=None, supports=None,
-                      formats: Tuple[str, ...] = ("w4a16_*",)):
+                      formats: Tuple[str, ...] = ("w4a16_*",),
+                      splittable: bool = False):
     """Register an execute fn under ``name``; the planner picks it up with
     no dispatcher edits. ``cost`` defaults to +inf (never auto-chosen,
     still explicitly runnable); ``supports`` defaults to always-eligible;
     ``formats`` defaults to the W4A16 family — a strategy for another
-    precision declares its own patterns (e.g. ``formats=("w4a8_*",)``)."""
+    precision declares its own patterns (e.g. ``formats=("w4a8_*",)``).
+    ``splittable=True`` tells the planner the strategy honors
+    ``plan.split_k`` and tile refinement (the tiled Pallas kernels)."""
 
     def deco(fn):
         _REGISTRY[name] = Strategy(
@@ -216,6 +223,7 @@ def register_strategy(name: str, *, cost=None, supports=None,
             cost=cost or (lambda problem, plan: float("inf")),
             supports=supports or (lambda problem: True),
             formats=tuple(formats),
+            splittable=splittable,
         )
         return fn
 
@@ -327,13 +335,27 @@ def _supports_pallas(problem: MatmulProblem) -> bool:
 
 def _cost_w4a8(problem: MatmulProblem, plan: KernelPlan) -> float:
     """W4A8 reference path: int8 activation read (half the fp16 bytes),
-    packed int4 weight read, int32 MACs at MXU rate."""
+    packed int4 weight read, int32 MACs at MXU rate — plus the (M, G, N)
+    fp32 group-accumulator the XLA einsum formulation materializes, which
+    is exactly what the fused Pallas kernel avoids."""
     M, N, K = problem.M, problem.N, problem.K
     spec = costmodel.TPU_V5E
     g = max(problem.group_size, 1)
-    bytes_moved = M * K + 0.5 * K * N + 4.0 * K * N / g + 2 * M * N
+    bytes_moved = (M * K + 0.5 * K * N + 4.0 * K * N / g + 2 * M * N
+                   + 8.0 * M * N * (K // g))        # write + read the acc
     t = max((2 * M * N * K) / spec.flops, bytes_moved / spec.hbm_bw)
     return t * problem.batch
+
+
+def _cost_w8a16_fused(problem: MatmulProblem, plan: KernelPlan) -> float:
+    return (costmodel.w8a16_time_tpu_fused(problem.M, problem.N, problem.K)
+            * problem.batch * _pallas_factor(problem))
+
+
+def _cost_w4a8_fused(problem: MatmulProblem, plan: KernelPlan) -> float:
+    return (costmodel.w4a8_time_tpu_fused(
+        problem.M, problem.N, problem.K, group=problem.group_size)
+        * problem.batch * _pallas_factor(problem))
 
 
 # ---------------------------------------------------------------------------
@@ -385,7 +407,8 @@ def _run_w4a8_xla(x2, qt, plan, *, interpret=None):
         _exec_out_dtype(plan, x2))
 
 
-@register_strategy("fused", cost=_cost_fused, supports=_supports_pallas)
+@register_strategy("fused", cost=_cost_fused, supports=_supports_pallas,
+                   splittable=True)
 def _run_fused(x2, qt, plan, *, interpret=None):
     return w4a16_fused(
         x2, qt, split_k=max(plan.split_k, 1),
@@ -394,9 +417,35 @@ def _run_fused(x2, qt, plan, *, interpret=None):
 
 
 @register_strategy("decoupled", cost=_cost_decoupled,
-                   supports=_supports_pallas)
+                   supports=_supports_pallas, splittable=True)
 def _run_decoupled(x2, qt, plan, *, interpret=None):
     return w4a16_decoupled(
+        x2, qt, split_k=max(plan.split_k, 1),
+        block_m=plan.block_m, block_n=plan.block_n, block_k=plan.block_k,
+        out_dtype=_exec_out_dtype(plan, x2), interpret=interpret)
+
+
+def _supports_w8a16_pallas(problem: MatmulProblem) -> bool:
+    # per-channel (or per-tensor) scales: one scale row spans all of K;
+    # int8 rows have no packing constraint on K
+    return problem.group_size >= problem.K > 0
+
+
+@register_strategy("w8a16_fused", cost=_cost_w8a16_fused,
+                   supports=_supports_w8a16_pallas,
+                   formats=("w8a16_channel*",), splittable=True)
+def _run_w8a16_fused(x2, qt, plan, *, interpret=None):
+    return w8a16_fused(
+        x2, qt, split_k=max(plan.split_k, 1),
+        block_m=plan.block_m, block_n=plan.block_n, block_k=plan.block_k,
+        out_dtype=_exec_out_dtype(plan, x2), interpret=interpret)
+
+
+@register_strategy("w4a8_fused", cost=_cost_w4a8_fused,
+                   supports=_supports_pallas, formats=("w4a8_*",),
+                   splittable=True)
+def _run_w4a8_fused(x2, qt, plan, *, interpret=None):
+    return w4a8_fused(
         x2, qt, split_k=max(plan.split_k, 1),
         block_m=plan.block_m, block_n=plan.block_n, block_k=plan.block_k,
         out_dtype=_exec_out_dtype(plan, x2), interpret=interpret)
@@ -526,7 +575,7 @@ def _default_plan(problem: MatmulProblem, strategy: str,
     """Heuristic (or refined) plan parameters for one strategy."""
     split_k = 1
     block_m, block_n, block_k = 128, 256, 512
-    if strategy in ("fused", "decoupled"):
+    if get_strategy(strategy).splittable:
         split_k = choose_split_k(problem.M, problem.N, problem.K,
                                  group_size=problem.group_size)
         if refine:

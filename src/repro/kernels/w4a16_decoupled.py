@@ -22,10 +22,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.quant import QuantizedTensor
-from repro.kernels import common
+from repro.kernels import common, template
 
 
 # ---------------------------------------------------------------------------
@@ -92,24 +91,10 @@ def dequant_w4(
 
 
 # ---------------------------------------------------------------------------
-# Phase 2: Split-K GEMM over the HBM workspace (cube-core role)
+# Phase 2: Split-K GEMM over the HBM workspace (cube-core role).
+# A template composition: identity weight stage + float contraction, raw
+# (S, M, N) partials — phase 3 reduces them through HBM, per the paper.
 # ---------------------------------------------------------------------------
-
-def _splitk_gemm_kernel(x_ref, w_ref, o_ref, acc_ref):
-    k = pl.program_id(3)
-
-    @pl.when(k == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    acc_ref[...] += jnp.dot(
-        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
-    )
-
-    @pl.when(k == pl.num_programs(3) - 1)
-    def _flush():
-        o_ref[0] = acc_ref[...]
-
 
 @functools.partial(
     jax.jit,
@@ -126,34 +111,18 @@ def splitk_gemm(
     interpret=None,
 ) -> jax.Array:
     """Phase-2 kernel: S fp32 partial products C_i = A · B_i in HBM."""
-    interpret = common.resolve_interpret(interpret)
-    M, K = x.shape
     K2, N = w.shape
-    assert K == K2 and K % split_k == 0
-    x = common.pad_dim(x, 0, common.SUBLANE)
-    Mp = x.shape[0]
-    bm = common.largest_divisor(Mp, block_m)
-    bn = common.pick_block(N, block_n)
-    ks = K // split_k
-    bk = common.pick_block(ks, block_k)
-    nk = ks // bk
-
-    partials = pl.pallas_call(
-        _splitk_gemm_kernel,
-        grid=(split_k, Mp // bm, N // bn, nk),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda s, m, n, k: (m, s * nk + k)),
-            pl.BlockSpec((bk, bn), lambda s, m, n, k: (s * nk + k, n)),
-        ],
-        out_specs=pl.BlockSpec((1, bm, bn), lambda s, m, n, k: (s, m, n)),
-        out_shape=jax.ShapeDtypeStruct((split_k, Mp, N), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=common.compiler_params(
-            ("parallel", "parallel", "parallel", "arbitrary")
-        ),
+    assert x.shape[1] == K2 and K2 % split_k == 0
+    return template.tiled_matmul(
+        x,
+        template.DenseWeight(w),
+        template.FloatContraction(),
+        N=N,
+        split_k=split_k,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        reduce_splits=False,
         interpret=interpret,
-    )(x, w)
-    return partials[:, :M] if Mp != M else partials
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -7,7 +7,10 @@ INT4→float dequant happens in VMEM between the HBM→VMEM weight copy and the
 MXU contraction: weight HBM traffic is the packed K·N/2 bytes, and the
 paper's extra round-trip disappears entirely.
 
-Two launch shapes:
+Composed from the stage template (kernels/template.py): grouped INT4
+dequant weight stage + float MXU contraction, in both of the paper's launch
+shapes:
+
   split_k == 1 : grid (M/bm, N/bn, K/bk), fp32 VMEM accumulator, direct out.
                  (the "data-parallel" strategy of the paper)
   split_k == S : grid (S, M/bm, N/bn, K/S/bk) writing S fp32 partials, then
@@ -19,51 +22,9 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.quant import QuantizedTensor
-from repro.kernels import common
-
-
-def _make_kernel(repeat: int, has_zeros: bool, partial_out: bool, k_axis: int):
-    def kernel(x_ref, p_ref, s_ref, *rest):
-        if has_zeros:
-            z_ref, o_ref, acc_ref = rest
-        else:
-            z_ref = None
-            o_ref, acc_ref = rest
-        k = pl.program_id(k_axis)
-
-        @pl.when(k == 0)
-        def _init():
-            acc_ref[...] = jnp.zeros_like(acc_ref)
-
-        w = common.dequant_block(p_ref, s_ref, z_ref, repeat, x_ref.dtype)
-        acc_ref[...] += jnp.dot(
-            x_ref[...], w, preferred_element_type=jnp.float32
-        )
-
-        @pl.when(k == pl.num_programs(k_axis) - 1)
-        def _flush():
-            if partial_out:
-                o_ref[0] = acc_ref[...].astype(o_ref.dtype)
-            else:
-                o_ref[...] = acc_ref[...].astype(o_ref.dtype)
-
-    return kernel
-
-
-def _choose_blocks(M, N, K, group_size, block_m, block_n, block_k, split_k):
-    bm = common.largest_divisor(M, block_m)
-    bn = common.pick_block(N, block_n)
-    ks = K // split_k
-    # bk must divide the K-slice and be group-compatible (bk % g or g % bk)
-    bk = common.pick_block(ks, block_k)
-    while bk > 1 and not (bk % group_size == 0 or group_size % bk == 0):
-        bk = common.largest_divisor(ks, bk - 1)
-    return bm, bn, bk
+from repro.kernels import template
 
 
 @functools.partial(
@@ -84,82 +45,16 @@ def w4a16_fused(
     interpret=None,
 ) -> jax.Array:
     """C = x · Dequant(W), dequantizing in VMEM. x:(M,K) float, W packed."""
-    out_dtype = out_dtype or x.dtype
-    interpret = common.resolve_interpret(interpret)
-    M, K = x.shape
+    K = x.shape[1]
     assert K == qt.K, (x.shape, qt.shape)
-    N = qt.N
-    g = qt.group_size
-    assert K % split_k == 0 and (K // split_k) % g == 0, (
-        f"K={K} split_k={split_k} must keep K-slices group-aligned (g={g})"
-    )
-
-    x = common.pad_dim(x, 0, common.SUBLANE)
-    Mp = x.shape[0]
-    bm, bn, bk = _choose_blocks(Mp, N, K, g, block_m, block_n, block_k, split_k)
-    repeat = min(bk, g)                      # scale rows expand by this factor
-    spb = max(1, bk // g)                    # scale rows per block
-    has_zeros = qt.zeros is not None
-    ks = K // split_k
-    nk = ks // bk
-
-    def x_map(s, m, n, k):
-        return (m, s * nk + k)
-
-    def p_map(s, m, n, k):
-        return (s * nk + k, n)
-
-    def s_map(s, m, n, k):
-        return (((s * nk + k) * bk) // g // spb, n)
-
-    in_specs = [
-        pl.BlockSpec((bm, bk), x_map),
-        pl.BlockSpec((bk // 2, bn), p_map),
-        pl.BlockSpec((spb, bn), s_map),
-    ]
-    operands = [x, qt.packed, qt.scales]
-    if has_zeros:
-        in_specs.append(pl.BlockSpec((spb, bn), s_map))
-        operands.append(qt.zeros)
-
-    if split_k == 1:
-        # strip the s index for the direct-output launch
-        def drop_s(f):
-            return lambda m, n, k: f(0, m, n, k)
-
-        in_specs = [
-            pl.BlockSpec((bm, bk), drop_s(x_map)),
-            pl.BlockSpec((bk // 2, bn), drop_s(p_map)),
-            pl.BlockSpec((spb, bn), drop_s(s_map)),
-        ]
-        if has_zeros:
-            in_specs.append(pl.BlockSpec((spb, bn), drop_s(s_map)))
-        grid = (Mp // bm, N // bn, nk)
-        out = pl.pallas_call(
-            _make_kernel(repeat, has_zeros, partial_out=False, k_axis=2),
-            grid=grid,
-            in_specs=in_specs,
-            out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
-            out_shape=jax.ShapeDtypeStruct((Mp, N), out_dtype),
-            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-            compiler_params=common.compiler_params(
-                ("parallel", "parallel", "arbitrary")
-            ),
-            interpret=interpret,
-        )(*operands)
-        return out[:M]
-
-    grid = (split_k, Mp // bm, N // bn, nk)
-    partials = pl.pallas_call(
-        _make_kernel(repeat, has_zeros, partial_out=True, k_axis=3),
-        grid=grid,
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, bm, bn), lambda s, m, n, k: (s, m, n)),
-        out_shape=jax.ShapeDtypeStruct((split_k, Mp, N), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=common.compiler_params(
-            ("parallel", "parallel", "parallel", "arbitrary")
-        ),
+    return template.tiled_matmul(
+        x,
+        template.GroupedInt4Dequant(qt.packed, qt.scales, qt.zeros),
+        template.FloatContraction(),
+        N=qt.N,
+        group_size=qt.group_size,
+        split_k=split_k,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        out_dtype=out_dtype or x.dtype,
         interpret=interpret,
-    )(*operands)
-    return jnp.sum(partials, axis=0).astype(out_dtype)[:M]
+    )

@@ -1,0 +1,71 @@
+"""Fused W4A8 GEMM — int8 MXU dot with in-VMEM INT4 unpack.
+
+The Pallas execution path for ``w4a8_*`` formats (LiquidGEMM-style W4A8,
+see PAPERS.md), replacing the XLA-only ``w4a8_xla`` reference path as the
+planned strategy on TPU:
+
+  1. activations are dynamically quantized per token to INT8 outside the
+     kernel (``quantize_activations_int8`` — one scale per row);
+  2. the weight stage unpacks packed INT4 nibbles to an INT8 tile in VMEM
+     (no float dequant — scales stay symbolic);
+  3. the contraction runs int8×int8 MXU dots with
+     ``preferred_element_type=int32`` — exact integer accumulation within
+     each scale group — and rescales by the group scale at the group
+     boundary into the fp32 accumulator;
+  4. the epilogue applies the per-token activation scale and downcasts.
+
+Weight HBM traffic is the packed K·N/2 bytes plus the scale rows, and the
+activation read is half the fp16 bytes — the format the paper's memory-
+bottleneck analysis points to once weights alone stop being the wall.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core.quant import QuantizedTensor, quantize_activations_int8
+from repro.kernels import template
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "split_k", "block_m", "block_n", "block_k", "out_dtype", "interpret",
+    ),
+)
+def w4a8_fused(
+    x: jax.Array,
+    qt: QuantizedTensor,
+    *,
+    split_k: int = 1,
+    block_m: int = 128,
+    block_n: int = 256,
+    block_k: int = 512,
+    out_dtype=None,
+    interpret=None,
+) -> jax.Array:
+    """C = (s_x · x_q) · Dequant(W) with integer accumulation. x:(M,K) float.
+
+    Matches ``w4a8_matmul_ref`` (same dynamic activation quantization, same
+    group-boundary rescale) up to fp32 summation order.
+    """
+    K = x.shape[1]
+    assert K == qt.K, (x.shape, qt.shape)
+    if qt.format.packing != "int4_pairs_k":
+        raise ValueError(
+            f"w4a8_fused needs int4_pairs_k packing, got format "
+            f"{qt.format.name!r} ({qt.format.packing})")
+    xq, xs = quantize_activations_int8(x)
+    return template.tiled_matmul(
+        xq,
+        template.GroupedInt4Raw(qt.packed, qt.scales, qt.zeros),
+        template.Int8GroupContraction(),
+        N=qt.N,
+        group_size=qt.group_size,
+        split_k=split_k,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        out_dtype=out_dtype or x.dtype,
+        finalize=lambda y: y * xs,          # per-token epilogue rescale
+        interpret=interpret,
+    )

@@ -1,0 +1,57 @@
+"""Fused W8A16 GEMM — per-channel INT8 weights, dequant in VMEM.
+
+The ``w8a16_channel`` counterpart of the fused W4A16 kernel: INT8 weight
+rows cross HBM once (K·N bytes, half the fp16 footprint), the per-channel
+scale row rides along as a (1, bn) block, and the INT8→float dequant
+happens in VMEM right before the MXU contraction — no global-memory
+round-trip (the paper's decoupled-architecture penalty does not apply).
+
+A template composition (kernels/template.py): per-channel INT8 dequant
+weight stage + float MXU contraction, both data-parallel and Split-K
+launch shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core.quant import QuantizedTensor, per_channel_scales
+from repro.kernels import template
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "split_k", "block_m", "block_n", "block_k", "out_dtype", "interpret",
+    ),
+)
+def w8a16_fused(
+    x: jax.Array,
+    qt: QuantizedTensor,
+    *,
+    split_k: int = 1,
+    block_m: int = 128,
+    block_n: int = 256,
+    block_k: int = 512,
+    out_dtype=None,
+    interpret=None,
+) -> jax.Array:
+    """C = x · Dequant(W) for per-channel INT8 weights. x:(M,K) float."""
+    K = x.shape[1]
+    assert K == qt.K, (x.shape, qt.shape)
+    if qt.format.packing != "int8_rows":
+        raise ValueError(
+            f"w8a16_fused needs int8_rows packing, got format "
+            f"{qt.format.name!r} ({qt.format.packing})")
+    scales, zeros = per_channel_scales(qt)   # (1, N), tensor broadcast too
+    return template.tiled_matmul(
+        x,
+        template.ChannelInt8Dequant(qt.packed, scales, zeros),
+        template.FloatContraction(),
+        N=qt.N,
+        split_k=split_k,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        out_dtype=out_dtype or x.dtype,
+        interpret=interpret,
+    )
