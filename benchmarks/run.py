@@ -252,6 +252,57 @@ def bench_formats(out_path: str = "BENCH_formats.json") -> dict:
     return blob
 
 
+# ---------------------------------------------------------------------------
+# Serving sweep: the continuous-batching engine end to end — tokens/sec at
+# several slot counts, persisted as BENCH_serving.json (CI artifact). This
+# is the LiquidGEMM lesson: kernel wins only count when a batched serving
+# loop drives them.
+# ---------------------------------------------------------------------------
+
+def bench_serving(out_path: str = "BENCH_serving.json") -> dict:
+    """Engine decode throughput/latency per slot count on a reduced arch
+    (CPU trend numbers; the shapes scale with batch, the regime does not)."""
+    import dataclasses
+
+    from repro import configs
+    from repro.models import transformer as T
+    from repro.runtime.engine import Request, ServingEngine
+
+    print("# serving: name,us_per_call,derived(tok/s)")
+    arch, P, G = "h2o-danube-1.8b", 8, 8
+    cfg = dataclasses.replace(configs.get_reduced(arch),
+                              w4a16_strategy="auto",
+                              quant_format=BENCH_FORMAT)
+    key = jax.random.PRNGKey(0)
+    params = T.quantize_params(T.init_params(key, cfg), cfg, min_size=0)
+    cells = []
+    for B in (1, 2, 4):
+        engine = ServingEngine(cfg, params, max_batch=B, max_prompt_len=P,
+                               max_new_tokens=G)
+        tokens = jax.random.randint(key, (B, P), 0, cfg.vocab_size)
+        reqs = [Request(rid=i, prompt=tokens[i], max_new_tokens=G)
+                for i in range(B)]
+        report = engine.run(reqs)
+        ms_step = (report.decode_s / max(len(report.step_records), 1)) * 1e3
+        name = f"serving/{arch}/B{B}_P{P}_G{G}"
+        print(f"{name},{ms_step*1e3:.1f},{report.tokens_per_s:.2f}")
+        cells.append({
+            "name": name, "arch": arch, "batch": B, "prompt_len": P,
+            "gen": G, "steps": report.steps,
+            "decode_tokens": report.decode_tokens,
+            "ms_per_step": round(ms_step, 3),
+            "tok_per_s": round(report.tokens_per_s, 3),
+            "prefill_ms": round(report.prefill_s * 1e3, 3),
+            "cache_len": engine.cache_len,
+        })
+    blob = {"format": BENCH_FORMAT, "backend": jax.default_backend(),
+            "cells": cells}
+    with open(out_path, "w") as f:
+        json.dump(blob, f, indent=1, sort_keys=True)
+    print(f"# serving: wrote {len(cells)} cells -> {out_path}")
+    return blob
+
+
 BENCHES = {
     "fig2": bench_fig2_splitk_vs_dataparallel,
     "fig3": bench_fig3_w4a16_vs_fp16,
@@ -259,6 +310,7 @@ BENCHES = {
     "capacity": bench_capacity,
     "plans": bench_plans,
     "formats": bench_formats,
+    "serving": bench_serving,
 }
 
 
@@ -267,9 +319,10 @@ def main(argv=None) -> None:
     ap.add_argument("benches", nargs="*", metavar="bench",
                     help=f"subset of {list(BENCHES)} (default: all)")
     ap.add_argument("--quick", action="store_true",
-                    help="run the quick perf snapshot and the fused-format "
-                         "sweep, writing BENCH_quickstart.json and "
-                         "BENCH_formats.json (the CI artifacts)")
+                    help="run the quick perf snapshot, the fused-format "
+                         "sweep, and the serving sweep, writing "
+                         "BENCH_quickstart.json, BENCH_formats.json and "
+                         "BENCH_serving.json (the CI artifacts)")
     ap.add_argument("--format", default=quant.DEFAULT_FORMAT,
                     help="QuantFormat name for quantized benches "
                          "(w4a16_g128 | w8a16_channel | w4a8_g128 | ...)")
@@ -282,6 +335,7 @@ def main(argv=None) -> None:
     if args.quick:
         bench_quick(args.out)
         bench_formats()
+        bench_serving()
         return
     for name in args.benches or list(BENCHES):
         if name not in BENCHES:

@@ -1,10 +1,14 @@
 """Serve a W4A16-quantized model with batched requests (paper's deployment).
 
 Loads a reduced h2o-danube (SWA) model, quantizes every linear to INT4,
-prefills a batch of prompts and decodes greedily — the K≫N small-M GEMM
-regime where the paper's Split-K strategy applies. The planner chooses the
-kernel per layer ("auto"); its decisions persist to a JSON plan cache that
-later runs (or the train driver) warm-start from.
+and runs the continuous-batching engine (runtime/engine.py): requests
+arrive over time, a slot scheduler admits/evicts them per decode step, and
+every decode runs the K≫N small-M GEMM regime where the paper's Split-K
+strategy applies. The planner chooses the kernel per layer ("auto"); its
+decisions persist to a JSON plan cache that later runs (or the train
+driver) warm-start from. Add ``--mesh 2x4`` (with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``) for mesh-sharded
+serving with shard-local plans — see docs/serving.md.
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -14,6 +18,7 @@ if __name__ == "__main__":
     main([
         "--arch", "h2o-danube-1.8b", "--reduced",
         "--batch", "4", "--prompt-len", "32", "--gen", "12",
+        "--requests", "8", "--arrival-every", "2",
         "--strategy", "auto",
         "--format", "w4a16_g128",     # or w8a16_channel / w4a8_g128
         "--plan-cache", "/tmp/repro_plan_cache.json",

@@ -36,3 +36,21 @@ def cache_len_for(cfg: ModelConfig, shape: ShapeSpec) -> int:
     if cfg.sliding_window > 0:
         return min(shape.seq_len, cfg.sliding_window)
     return shape.seq_len
+
+
+def serve_cache_len(cfg: ModelConfig, prompt_len: int, gen: int) -> int:
+    """KV-cache length for serving ``prompt_len`` prompt + ``gen`` new tokens.
+
+    Prefill writes ``prompt_len + vision_prefix`` entries and decode advances
+    from ``pos0 = prompt_len + vision_prefix``, so the ring must hold
+    ``pos0 + gen`` positions — sizing it from ``prompt_len + gen`` alone makes
+    the pos-tagged ring silently overwrite the earliest context on
+    vision-prefix archs. Encoder-decoder audio frames live in the separate
+    ``enc_kv`` cross-attention cache and never consume decoder positions, so
+    they deliberately do NOT widen the decoder cache. Sliding-window archs
+    stay bounded by their window.
+    """
+    total = prompt_len + (cfg.vision_prefix or 0) + gen
+    if cfg.sliding_window > 0:
+        return min(total, cfg.sliding_window)
+    return total

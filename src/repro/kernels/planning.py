@@ -66,7 +66,7 @@ __all__ = [
     "MatmulProblem", "KernelPlan", "Strategy",
     "register_strategy", "get_strategy", "available_strategies",
     "strategies_for_format",
-    "plan_matmul", "resolve_plan", "execute",
+    "plan_matmul", "resolve_plan", "execute", "shard_problem",
     "PlanCache", "PLAN_CACHE", "load_plan_cache", "save_plan_cache",
     "choose_split_k", "num_cores",
 ]
@@ -138,6 +138,51 @@ class MatmulProblem:
             except (TypeError, ValueError):
                 d["format"] = DEFAULT_FORMAT
         return cls(**d)
+
+
+def _mesh_axis_size(mesh, name: str) -> int:
+    """Axis size by name; 0 when absent (works on Mesh and spec-level fakes)."""
+    try:
+        return int(mesh.shape[name])
+    except (KeyError, TypeError):
+        return 0
+
+
+def shard_problem(problem: MatmulProblem, mesh, kind: str) -> MatmulProblem:
+    """The per-rank LOCAL GEMM of ``problem`` under tensor-parallel sharding.
+
+    Megatron TP shrinks exactly one weight dim per rank: ``kind="row"``
+    (wo / w_down / out_proj — input features sharded) divides K by the
+    "model" axis, ``kind="col"`` (wq / w_up / lm_head — output features
+    sharded) divides N; ``kind="rep"`` leaves the weight whole. Data-parallel
+    axes divide the activation rows M for every kind. A dim that the mesh
+    doesn't divide stays global — mirroring ``runtime/sharding.py``, which
+    only shards divisible dims.
+
+    Dispatch decisions (Split-K degree, tiles, memory round-trips) must be
+    costed on THESE shapes: row-parallel sharding moves each rank's GEMM
+    deeper into the K ≫ N decode regime the paper's Split-K analysis targets,
+    and a plan chosen for the global shape systematically under-splits.
+    """
+    if mesh is None:
+        return problem
+    model = _mesh_axis_size(mesh, "model")
+    M, N, K = problem.M, problem.N, problem.K
+    # greedy per-axis batch division, EXACTLY mirroring sharding.batch_spec:
+    # a batch divisible by "pod" but not pod*data still shards (and shrinks)
+    # over pod alone
+    dp = 1
+    for a in ("pod", "data"):
+        sz = _mesh_axis_size(mesh, a)
+        if sz > 1 and M % (dp * sz) == 0:
+            dp *= sz
+    M //= dp
+    if model > 1:
+        if kind == "col" and N % model == 0:
+            N //= model
+        elif kind == "row" and K % model == 0:
+            K //= model
+    return dataclasses.replace(problem, M=max(M, 1), N=N, K=K)
 
 
 # ---------------------------------------------------------------------------
@@ -713,18 +758,40 @@ def matmul(x: jax.Array, qt: QuantizedTensor, *, cfg=None,
 
 
 def plan_for_params(params, M: int, *, refine: bool = False,
-                    backend: Optional[str] = None) -> Dict[str, KernelPlan]:
+                    backend: Optional[str] = None,
+                    mesh=None) -> Dict[str, KernelPlan]:
     """Pre-plan every quantized layer GEMM in a param pytree for ``M`` rows.
 
     Returns ``{layer_key ("KxN"): plan}``; every decision lands in the
     process plan cache, so subsequent layer-time lookups (same M/dtypes)
     are hits. ``refine=True`` runs the tile-search refinement per layer —
     the launcher-facing replacement for the old per-call autotune kwarg.
+
+    With ``mesh`` given the planner goes SHARD-LOCAL: each leaf's TP kind
+    (col/row/rep, the same name rules ``runtime/sharding.py`` shards it by)
+    derives the per-rank local GEMM via :func:`shard_problem`, the plan is
+    chosen by costing that local shape, and the local problem is what lands
+    in the plan cache — plan-cache keys carry the shape each rank actually
+    executes. The returned dict stays keyed by the GLOBAL layer_key, which
+    is what trace-time ``resolve_plan`` lookups (global shapes under GSPMD)
+    see, so the dict plugs straight into ``cfg.w4a16_plan``.
+
+    A global "KxN" key can be shared by leaves of DIFFERENT TP kinds
+    (square attention projections: wq is col-parallel, wo row-parallel) —
+    trace-time lookups can't tell them apart, so when their shard-local
+    plans disagree the key is dropped from the returned dict (those layers
+    fall back to global-shape planning) rather than handing one layer the
+    other's wrong-shape plan.
     """
+    if mesh is not None:
+        # runtime.sharding owns the name→TP-kind rules; imported lazily so
+        # the kernels layer has no import-time dependency on runtime/
+        from repro.runtime.sharding import leaf_kind_for_path
     plans: Dict[str, KernelPlan] = {}
-    leaves = jax.tree_util.tree_leaves(
+    ambiguous = set()
+    flat, _ = jax.tree_util.tree_flatten_with_path(
         params, is_leaf=lambda t: isinstance(t, QuantizedTensor))
-    for leaf in leaves:
+    for path, leaf in flat:
         if not isinstance(leaf, QuantizedTensor):
             continue
         K = int(leaf.K)
@@ -740,5 +807,15 @@ def plan_for_params(params, M: int, *, refine: bool = False,
             has_zeros=leaf.zeros is not None,
             backend=backend or jax.default_backend(),
             format=leaf.format.name)
-        plans[problem.layer_key] = plan_matmul(problem, refine=refine)
+        if mesh is not None:
+            local = shard_problem(problem, mesh, leaf_kind_for_path(path))
+            plan = plan_matmul(local, refine=refine)
+        else:
+            plan = plan_matmul(problem, refine=refine)
+        key = problem.layer_key
+        if plans.get(key, plan) != plan:
+            ambiguous.add(key)
+        plans[key] = plan
+    for key in ambiguous:
+        del plans[key]
     return plans

@@ -21,6 +21,27 @@ def make_local_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def parse_mesh(spec: str):
+    """``--mesh DATAxMODEL`` (e.g. ``2x4``) → a local (data, model) mesh.
+
+    Device count must satisfy data*model; on a CPU host force fake devices
+    with ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before*
+    the first jax call (see docs/serving.md).
+    """
+    try:
+        data, model = (int(p) for p in spec.lower().split("x"))
+    except ValueError:
+        raise ValueError(
+            f"--mesh expects DATAxMODEL (e.g. 2x4), got {spec!r}") from None
+    have = jax.device_count()
+    if data * model > have:
+        raise ValueError(
+            f"--mesh {spec} needs {data * model} devices but only {have} "
+            f"are visible; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={data * model}")
+    return make_local_mesh(data=data, model=model)
+
+
 def dp_axes(mesh) -> tuple:
     """The data-parallel axes: ('pod','data') multi-pod, ('data',) single."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

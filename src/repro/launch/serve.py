@@ -1,10 +1,18 @@
-"""Serving driver: W4A16-quantized prefill + batched greedy decode.
+"""Serving driver: W4A16-quantized continuous-batching decode on a mesh.
 
     PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b \
         --reduced --batch 4 --prompt-len 32 --gen 16 --strategy fused
 
+    # 8 fake CPU devices, 2-way data x 4-way tensor parallel:
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b \
+        --reduced --mesh 2x4 --batch 4 --requests 8 --arrival-every 2
+
 This is the paper's deployment scenario: weights quantized to INT4 at load
-time, decode GEMMs run K≫N with small M — the Split-K regime.
+time, decode GEMMs run K≫N with small M — the Split-K regime. The
+``runtime/engine.py`` scheduler admits/evicts requests per decode step
+(continuous batching) and, on a mesh, plans every layer GEMM on its
+shard-local shape (K/tp row-parallel, N/tp column-parallel).
 """
 from __future__ import annotations
 
@@ -17,20 +25,34 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
-from repro.configs.shapes import cache_len_for, ShapeSpec
 from repro.core import quant
 from repro.kernels import planning
+from repro.launch import mesh as launch_mesh
 from repro.models import transformer as T
-from repro.runtime import steps as rsteps
+from repro.runtime.engine import Request, ServingEngine
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list(configs.ARCHS))
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="engine slot count (max concurrent requests)")
+    ap.add_argument("--max-batch", type=int, default=None,
+                    help="alias for --batch (slot-pool size)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=None,
+                    help="total simulated requests (default: the slot "
+                         "count — one full static batch)")
+    ap.add_argument("--arrival-every", type=int, default=0,
+                    help="request-arrival simulation: one request every K "
+                         "decode steps (0 = all arrive at step 0)")
+    ap.add_argument("--mesh", default=None,
+                    help="DATAxMODEL serving mesh (e.g. 2x4); requires "
+                         "data*model visible devices — on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count. Default: "
+                         "single device")
     ap.add_argument("--strategy", default="auto",
                     choices=["auto"] + list(planning.available_strategies()))
     ap.add_argument("--format", default=None,
@@ -44,6 +66,8 @@ def main(argv=None):
     ap.add_argument("--refine-plans", action="store_true",
                     help="run the planner's tile-search refinement pass")
     ap.add_argument("--no-quant", action="store_true")
+    ap.add_argument("--verbose", action="store_true",
+                    help="per-step engine log lines")
     args = ap.parse_args(argv)
 
     if args.plan_cache and os.path.exists(args.plan_cache):
@@ -70,57 +94,63 @@ def main(argv=None):
                 params, is_leaf=lambda t: hasattr(t, "nbytes_packed")))
         print(f"[serve] {cfg.name} {fmt.name} ({args.strategy}); "
               f"weights {qbytes/1e6:.1f} MB on disk")
-        if args.strategy == "auto":
-            # pre-plan the decode-regime (M=batch) GEMMs: the planner's
-            # decisions land in the plan cache before the first trace
-            plans = planning.plan_for_params(params, M=args.batch,
-                                             refine=args.refine_plans)
-            for lk, plan in sorted(plans.items()):
-                print(f"[serve]   plan {lk}: {plan.strategy} "
-                      f"split_k={plan.split_k} "
-                      f"tiles=({plan.block_m},{plan.block_n},{plan.block_k})")
 
-    B, P, G = args.batch, args.prompt_len, args.gen
-    cache_len = min(P + G, cache_len_for(
-        cfg, ShapeSpec("serve", P + G, B, "decode")))
-    tokens = jax.random.randint(key, (B, P), 0, cfg.vocab_size)
-    extras = {}
-    if cfg.vision_prefix:
-        extras["prefix_embeds"] = jax.random.normal(
-            key, (B, cfg.vision_prefix, cfg.d_model), cfg.dtype)
-    if cfg.family == "encdec":
-        extras["audio_embeds"] = jax.random.normal(
-            key, (B, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+    mesh = launch_mesh.parse_mesh(args.mesh) if args.mesh else None
+    if mesh is not None:
+        print(f"[serve] mesh: "
+              f"{dict(zip(mesh.axis_names, mesh.devices.shape))} "
+              f"({mesh.devices.size} devices)")
 
-    prefill = jax.jit(rsteps.make_prefill_step(cfg, cache_len))
-    serve = jax.jit(rsteps.make_serve_step(cfg))
+    B = args.max_batch or args.batch
+    P, G = args.prompt_len, args.gen
+    R = args.requests or B
+    engine = ServingEngine(cfg, params, mesh=mesh, max_batch=B,
+                           max_prompt_len=P, max_new_tokens=G,
+                           refine_plans=args.refine_plans)
+    print(f"[serve] engine: {B} slots, cache_len {engine.cache_len} "
+          f"(prompt {P} + prefix {cfg.vision_prefix or 0} + gen {G})")
+    for lk, plan in sorted(engine.plans.items()):
+        print(f"[serve]   plan {lk}: {plan.strategy} "
+              f"split_k={plan.split_k} "
+              f"tiles=({plan.block_m},{plan.block_n},{plan.block_k})")
+
+    # request-arrival simulation: R requests over the same random prompt
+    # distribution, one every --arrival-every decode steps
+    tokens = jax.random.randint(key, (R, P), 0, cfg.vocab_size)
+    reqs = []
+    for i in range(R):
+        extras = {}
+        if cfg.vision_prefix:
+            extras["prefix_embeds"] = jax.random.normal(
+                jax.random.fold_in(key, i),
+                (cfg.vision_prefix, cfg.d_model), cfg.dtype)
+        if cfg.family == "encdec":
+            extras["audio_embeds"] = jax.random.normal(
+                jax.random.fold_in(key, i),
+                (cfg.encoder_seq, cfg.d_model), cfg.dtype)
+        reqs.append(Request(rid=i, prompt=tokens[i], max_new_tokens=G,
+                            arrival_step=i * args.arrival_every, **extras))
 
     t0 = time.time()
-    last_logits, state = prefill(params, {"tokens": tokens, **extras})
-    jax.block_until_ready(last_logits)
-    t_prefill = time.time() - t0
+    report = engine.run(reqs, verbose=args.verbose)
+    wall = time.time() - t0
 
-    tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
-    pos0 = P + (cfg.vision_prefix or 0)
-    out_tokens = [tok]
-    t0 = time.time()
-    for i in range(G - 1):
-        pos = jnp.full((B,), pos0 + i, jnp.int32)
-        res = serve(params, {"state": state, "tokens": tok, "pos": pos})
-        tok, state = res["next"], res["state"]
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)
-    t_dec = time.time() - t0
-    gen = jnp.stack(out_tokens, axis=1)
-    print(f"[serve] prefill {P} toks: {t_prefill*1e3:.1f} ms; "
-          f"decode {G-1} steps: {t_dec/(max(G-1,1))*1e3:.2f} ms/tok")
-    print(f"[serve] sample generation (batch 0): {gen[0].tolist()}")
+    lat = sorted(report.latencies.values())
+    p50 = lat[len(lat) // 2] if lat else 0.0
+    print(f"[serve] {R} requests in {report.steps} steps / {wall:.2f} s "
+          f"wall; prefill {report.prefill_s*1e3:.1f} ms total")
+    print(f"[serve] decode: {report.decode_tokens} tokens in "
+          f"{report.decode_s:.3f} s = {report.tokens_per_s:.1f} tok/s "
+          f"({report.decode_s / max(len(report.step_records), 1) * 1e3:.2f} "
+          f"ms/step); latency p50 {p50*1e3:.1f} ms "
+          f"max {lat[-1]*1e3 if lat else 0:.1f} ms")
+    print(f"[serve] sample generation (request 0): {report.results[0]}")
     if args.plan_cache:
         n = planning.save_plan_cache(args.plan_cache)
         c = planning.PLAN_CACHE
         print(f"[serve] plan cache: {n} plans -> {args.plan_cache} "
               f"({c.hits} hits / {c.misses} misses this run)")
-    return gen
+    return jnp.asarray([report.results[r.rid] for r in reqs], jnp.int32)
 
 
 if __name__ == "__main__":

@@ -159,6 +159,19 @@ def cache_insert(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
     return KVCache(k, v, p)
 
 
+def cache_reset_slots(cache: KVCache, slots) -> KVCache:
+    """Evict batch slot(s): mark every ring entry of those rows empty.
+
+    ``slots``: an int or int array of batch indices. Only the pos tags are
+    wiped (-1 = empty) — decode_attention masks on pos, so stale K/V bytes
+    are unreachable once their tags are cleared. Works on a per-layer cache
+    (B, W) or a layer-stacked one (L, B, W): the batch dim is always the
+    second-to-last of ``pos``.
+    """
+    p = cache.pos.at[..., slots, :].set(-1)
+    return KVCache(cache.k, cache.v, p)
+
+
 def cache_prefill(cache: KVCache, k_seq: jax.Array, v_seq: jax.Array) -> KVCache:
     """Fill the cache with the last W tokens of a prefilled sequence.
 

@@ -1,0 +1,372 @@
+"""Mesh-sharded serving engine: continuous batched decode over request slots.
+
+The paper's deployment regime — decode GEMMs with small M and K ≫ N — only
+materializes when a *serving loop* drives the kernels: a fixed pool of batch
+slots, requests admitted and evicted per step, one jitted decode step over
+the whole pool. This module provides that loop:
+
+  :class:`Request`       — one generation request (prompt, budget, arrival).
+  :class:`ServingEngine` — slot scheduler + compiled prefill/decode steps.
+  :class:`ServeReport`   — per-request tokens/latency + per-step throughput.
+
+Slot lifecycle (see docs/serving.md):
+
+  admit   — a free slot takes the next arrived request; its prompt is
+            prefilled at B=1 and the resulting decode state is written into
+            the slot's row of the pooled state (the whole row, pos ring tags
+            included, so a reused slot can never leak the previous
+            occupant's entries).
+  decode  — one ``serve_step`` over all ``max_batch`` slots; inactive slots
+            compute on empty caches (every op is batch-row independent, so
+            occupied rows are unaffected) and their outputs are ignored.
+  evict   — a finished slot's ring tags are wiped (``cache_reset_slots``)
+            and the slot returns to the free pool.
+
+On a mesh the steps are jitted with the shardings of ``runtime/steps.py``
+(params TP/FSDP-sharded, state batch- and window-sharded), and the kernel
+plans are chosen **shard-local**: ``plan_for_params(..., mesh=...)`` costs
+the per-rank GEMM (K/tp for row-parallel, N/tp for column-parallel — see
+``kernels/planning.shard_problem``) so Split-K and tiles match the shapes
+each rank actually executes.
+
+The KV cache is sized prefix-aware (``configs.shapes.serve_cache_len``):
+prefill writes ``prompt + vision_prefix`` entries and decode advances from
+that position, so the ring holds ``prompt + prefix + gen`` slots.
+"""
+from __future__ import annotations
+
+import collections
+import contextlib
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.shapes import serve_cache_len
+from repro.core import compat
+from repro.core.quant import QuantizedTensor
+from repro.kernels import planning
+from repro.models import attention
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.runtime import sharding as shd
+from repro.runtime import steps as rsteps
+
+__all__ = ["Request", "ServeReport", "ServingEngine",
+           "insert_slot", "reset_slot"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request.
+
+    ``prompt`` is a 1-D int32 token array; ``max_new_tokens`` counts every
+    generated token including the one produced by prefill. ``arrival_step``
+    simulates request arrival: the scheduler won't admit the request before
+    that decode step. Prefix/audio embeddings are per-request frontends
+    ((vision_prefix, d) / (encoder_seq, d)); when the arch needs them and
+    the request doesn't carry them, the engine substitutes zeros.
+    """
+
+    rid: int
+    prompt: Any
+    max_new_tokens: int
+    arrival_step: int = 0
+    prefix_embeds: Any = None
+    audio_embeds: Any = None
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """What a :meth:`ServingEngine.run` produced."""
+
+    results: Dict[int, List[int]]          # rid → generated token ids
+    latencies: Dict[int, float]            # rid → admit→finish seconds
+    steps: int = 0
+    decode_tokens: int = 0
+    decode_s: float = 0.0
+    prefill_s: float = 0.0
+    step_records: List[dict] = dataclasses.field(default_factory=list)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.decode_tokens / self.decode_s if self.decode_s else 0.0
+
+
+class _Slot:
+    """Mutable per-slot scheduler record."""
+
+    __slots__ = ("req", "tokens", "remaining", "pos_next", "t_admit")
+
+    def __init__(self, req: Request, first_token: int, pos0: int,
+                 t_admit: float):
+        self.req = req
+        self.tokens = [first_token]
+        self.remaining = req.max_new_tokens - 1
+        self.pos_next = pos0
+        self.t_admit = t_admit
+
+
+def insert_slot(state, rstate, slot: int):
+    """Write a B=1 prefilled decode state into batch slot ``slot``.
+
+    Every decode-state leaf is (L, B, ...) — KV caches, rwkv/ssm states,
+    encoder cross-attention KV — so one rule covers all families. The whole
+    slot row is overwritten, ring pos tags included: a reused slot can never
+    see a stale entry from its previous occupant.
+    """
+    return jax.tree.map(
+        lambda s, r: s.at[:, slot].set(r[:, 0].astype(s.dtype)),
+        state, rstate)
+
+
+def reset_slot(state, slot: int):
+    """Evict ``slot``: wipe its KV ring tags so the row reads as empty.
+
+    Insertion already overwrites the full row, so this is decode hygiene —
+    an evicted slot attends over nothing (uniformly masked scores) instead
+    of the finished request's context while it waits for reuse.
+    """
+    def visit(leaf):
+        if isinstance(leaf, attention.KVCache):
+            return attention.cache_reset_slots(leaf, slot)
+        return leaf
+
+    return jax.tree.map(
+        visit, state, is_leaf=lambda x: isinstance(x, attention.KVCache))
+
+
+class ServingEngine:
+    """Continuous-batching decode over ``max_batch`` request slots.
+
+    ``mesh=None`` runs single-device (plain ``jax.jit``); with a mesh the
+    prefill/serve steps are jitted with explicit shardings and the kernel
+    plans are chosen shard-local (see module docstring).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, mesh=None,
+                 max_batch: int = 8, max_prompt_len: int = 128,
+                 max_new_tokens: int = 64, refine_plans: bool = False,
+                 cache_len: Optional[int] = None):
+        self.mesh = mesh
+        self.max_batch = int(max_batch)
+        self.max_prompt_len = int(max_prompt_len)
+        self.max_new_tokens = int(max_new_tokens)
+        self.cache_len = int(cache_len if cache_len is not None
+                             else serve_cache_len(cfg, max_prompt_len,
+                                                  max_new_tokens))
+        self.plans: Dict[str, planning.KernelPlan] = {}
+        if (getattr(cfg, "w4a16_strategy", "auto") == "auto"
+                and getattr(cfg, "w4a16_plan", None) is None
+                and any(isinstance(l, QuantizedTensor)
+                        for l in jax.tree_util.tree_leaves(
+                            params,
+                            is_leaf=lambda t: isinstance(t, QuantizedTensor)))):
+            # pre-plan the decode-regime GEMMs on the shapes each rank will
+            # execute; the per-layer decisions pin the trace-time lookups
+            self.plans = planning.plan_for_params(
+                params, M=self.max_batch, mesh=mesh, refine=refine_plans)
+            cfg = dataclasses.replace(cfg, w4a16_plan=self.plans)
+        self.cfg = cfg
+
+        with self._ctx():
+            if mesh is not None:
+                pshard = shd.param_shardings(
+                    jax.eval_shape(lambda: params), mesh)
+                params = jax.device_put(params, pshard)
+        self.params = params
+
+        self._prefill_fns: Dict[tuple, Any] = {}
+        self._serve_fn = None
+        self.last_state = None      # decode-state snapshot (tests/debug)
+
+    # -- compiled steps ----------------------------------------------------
+
+    def _ctx(self):
+        return compat.set_mesh(self.mesh) if self.mesh is not None \
+            else contextlib.nullcontext()
+
+    def _prefill_inputs(self, req: Request):
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        inputs = {"tokens": prompt}
+        cfg = self.cfg
+        if cfg.vision_prefix:
+            pe = req.prefix_embeds
+            if pe is None:
+                pe = jnp.zeros((cfg.vision_prefix, cfg.d_model), cfg.dtype)
+            inputs["prefix_embeds"] = jnp.asarray(pe, cfg.dtype)[None]
+        if cfg.family == "encdec":
+            ae = req.audio_embeds
+            if ae is None:
+                ae = jnp.zeros((cfg.encoder_seq, cfg.d_model), cfg.dtype)
+            inputs["audio_embeds"] = jnp.asarray(ae, cfg.dtype)[None]
+        return inputs
+
+    def _prefill_fn(self, inputs):
+        key = tuple(sorted((k, v.shape) for k, v in inputs.items()))
+        fn = self._prefill_fns.get(key)
+        if fn is None:
+            if self.mesh is None:
+                fn = jax.jit(rsteps.make_prefill_step(self.cfg,
+                                                      self.cache_len))
+            else:
+                fn = rsteps.jit_prefill_step(
+                    self.cfg, self.mesh, self.cache_len,
+                    jax.eval_shape(lambda: self.params),
+                    jax.eval_shape(lambda: inputs))
+            self._prefill_fns[key] = fn
+        return fn
+
+    def _serve_step(self):
+        if self._serve_fn is None:
+            if self.mesh is None:
+                self._serve_fn = jax.jit(rsteps.make_serve_step(self.cfg))
+            else:
+                state_abs = jax.eval_shape(
+                    lambda: T.init_decode_state(self.cfg, self.max_batch,
+                                                self.cache_len))
+                inputs_abs = {
+                    "state": state_abs,
+                    "tokens": jax.ShapeDtypeStruct((self.max_batch,),
+                                                   jnp.int32),
+                    "pos": jax.ShapeDtypeStruct((self.max_batch,), jnp.int32),
+                }
+                self._state_shardings = shd.decode_state_shardings(
+                    state_abs, self.cfg, self.mesh)
+                self._serve_fn = rsteps.jit_serve_step(
+                    self.cfg, self.mesh,
+                    jax.eval_shape(lambda: self.params), inputs_abs)
+        return self._serve_fn
+
+    def _constrain_state(self, state):
+        """Pin ``state`` back onto the decode-state shardings. The eager
+        slot insert/reset scatters re-commit leaves with whatever sharding
+        propagation picked; the jitted serve step's in_shardings refuse a
+        committed mismatch, so re-place explicitly (a no-op when already
+        placed right)."""
+        if self.mesh is None:
+            return state
+        return jax.device_put(state, self._state_shardings)
+
+    # -- scheduler ---------------------------------------------------------
+
+    def pos0(self, req: Request) -> int:
+        """First decode position: prompt + vision prefix (prefill wrote
+        exactly that many cache entries)."""
+        return int(len(req.prompt)) + (self.cfg.vision_prefix or 0)
+
+    def run(self, requests, *, verbose: bool = False) -> ServeReport:
+        """Serve ``requests`` to completion; returns a :class:`ServeReport`.
+
+        The scheduler admits arrived requests into free slots each step
+        (prefilling them immediately), runs one batched decode step, and
+        evicts finished slots — continuous batching, not static batching:
+        a long request never blocks short ones from cycling through.
+        """
+        for r in requests:
+            if len(r.prompt) > self.max_prompt_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt length {len(r.prompt)} exceeds "
+                    f"engine max_prompt_len {self.max_prompt_len}")
+            if r.max_new_tokens > self.max_new_tokens:
+                raise ValueError(
+                    f"request {r.rid}: max_new_tokens {r.max_new_tokens} "
+                    f"exceeds engine budget {self.max_new_tokens}")
+            if r.max_new_tokens < 1:
+                raise ValueError(f"request {r.rid}: max_new_tokens must be "
+                                 f"at least 1 (prefill emits the first token)")
+
+        waiting = collections.deque(
+            sorted(requests, key=lambda r: (r.arrival_step, r.rid)))
+        slots: List[Optional[_Slot]] = [None] * self.max_batch
+        report = ServeReport(results={}, latencies={})
+
+        with self._ctx():
+            state = T.init_decode_state(self.cfg, self.max_batch,
+                                        self.cache_len)
+            state_dirty = True      # needs re-placing onto the serve
+                                    # shardings (set after insert/reset)
+            tok = np.zeros(self.max_batch, np.int32)
+            pos = np.zeros(self.max_batch, np.int32)
+            serve = self._serve_step()
+            step = 0
+            while waiting or any(s is not None for s in slots):
+                # -- admit arrived requests into free slots ----------------
+                admitted = 0
+                for i in range(self.max_batch):
+                    if not (waiting and waiting[0].arrival_step <= step):
+                        break
+                    if slots[i] is not None:
+                        continue
+                    req = waiting.popleft()
+                    t0 = time.perf_counter()
+                    inputs = self._prefill_inputs(req)
+                    logits, rstate = self._prefill_fn(inputs)(
+                        self.params, inputs)
+                    first = int(jnp.argmax(logits[0]))
+                    report.prefill_s += time.perf_counter() - t0
+                    state = insert_slot(state, rstate, i)
+                    state_dirty = True
+                    slot = _Slot(req, first, self.pos0(req), t0)
+                    if slot.remaining == 0:
+                        state = reset_slot(state, i)
+                        report.results[req.rid] = slot.tokens
+                        report.latencies[req.rid] = \
+                            time.perf_counter() - slot.t_admit
+                    else:
+                        slots[i] = slot
+                        tok[i], pos[i] = first, slot.pos_next
+                    admitted += 1
+                active = [i for i, s in enumerate(slots) if s is not None]
+                if not active:
+                    if waiting:       # idle until the next arrival
+                        step += 1
+                        continue
+                    break
+
+                # -- one batched decode step over every slot ---------------
+                if state_dirty:
+                    # the eager insert/reset scatters re-committed leaves
+                    # off the serve shardings; steady-state steps skip this
+                    # (the serve output already carries its out_shardings)
+                    state = self._constrain_state(state)
+                    state_dirty = False
+                t0 = time.perf_counter()
+                res = serve(self.params, {
+                    "state": state,
+                    "tokens": jnp.asarray(tok),
+                    "pos": jnp.asarray(pos),
+                })
+                state = res["state"]
+                nxt = np.asarray(res["next"])
+                dt = time.perf_counter() - t0
+                report.decode_s += dt
+                report.decode_tokens += len(active)
+                report.step_records.append({
+                    "step": step, "active": len(active),
+                    "admitted": admitted, "decode_ms": dt * 1e3})
+                if verbose:
+                    print(f"[engine] step {step}: active={len(active)} "
+                          f"admitted={admitted} {dt*1e3:.2f} ms")
+
+                # -- collect tokens; evict finished slots ------------------
+                for i in active:
+                    s = slots[i]
+                    s.tokens.append(int(nxt[i]))
+                    s.remaining -= 1
+                    s.pos_next += 1
+                    tok[i], pos[i] = nxt[i], s.pos_next
+                    if s.remaining == 0:
+                        report.results[s.req.rid] = s.tokens
+                        report.latencies[s.req.rid] = \
+                            time.perf_counter() - s.t_admit
+                        state = reset_slot(state, i)
+                        state_dirty = True
+                        slots[i] = None
+                step += 1
+            report.steps = step
+            self.last_state = state
+        return report

@@ -76,6 +76,15 @@ def _leaf_kind(names) -> str:
     return "rep"
 
 
+def leaf_kind_for_path(path) -> str:
+    """TP kind ("col" | "row" | "rep") of a param-tree leaf by its key path.
+
+    Public entry for shard-local planning (kernels/planning.py): the same
+    name rules that decide how a weight is sharded decide which of its GEMM
+    dims (N for col, K for row) shrinks per rank."""
+    return _leaf_kind(_names(path))
+
+
 def param_shardings(params, mesh, *, fsdp: bool = False,
                     fsdp_axis: str = "data"):
     """Pytree of NamedSharding matching ``params`` (QuantizedTensor-aware)."""
@@ -135,12 +144,30 @@ def batch_spec(B: int, mesh) -> P:
     return P(tuple(chosen) if chosen else None)
 
 
+def batch_axis_entry(B: int, mesh):
+    """The normalized PartitionSpec entry for a batch dim of size ``B``.
+
+    The single source for batch-axis entries in BOTH input and output
+    shardings: every caller (data_shardings, the jit step out_shardings)
+    goes through the same singleton-tuple normalization, so prefill/serve
+    out_shardings can never disagree with the input shardings on older jax
+    (where ``P(("data",))`` and ``P("data")`` compare unequal).
+    """
+    return _axis_entry(batch_spec(B, mesh))
+
+
 def data_shardings(tree, mesh, *, batch_axis: int = 0):
-    """Shard every array leaf's batch dim per batch_spec; rest replicated."""
+    """Shard every array leaf's batch dim per batch_spec; rest replicated.
+
+    Leaves with no batch dim (0-d scalars, or fewer dims than
+    ``batch_axis`` addresses) are replicated instead of indexing past the
+    end of their spec."""
 
     def visit(leaf):
+        if leaf.ndim <= batch_axis:            # scalar / missing batch dim
+            return NamedSharding(mesh, P())
         spec = [None] * leaf.ndim
-        spec[batch_axis] = _axis_entry(batch_spec(leaf.shape[batch_axis], mesh))
+        spec[batch_axis] = batch_axis_entry(leaf.shape[batch_axis], mesh)
         return NamedSharding(mesh, P(*spec))
 
     return jax.tree.map(visit, tree)

@@ -188,8 +188,9 @@ def jit_prefill_step(cfg, mesh, cache_len: int, params_abstract,
     _, state_abs = jax.eval_shape(fn, params_abstract, inputs_abstract)
     sshard = shd.decode_state_shardings(state_abs, cfg, mesh)
     B = inputs_abstract["tokens"].shape[0]
-    bspec = shd.batch_spec(B, mesh)
-    baxis = bspec[0] if len(bspec) > 0 else None
+    # same normalized entry as the input shardings (shd.batch_axis_entry) —
+    # a raw bspec[0] here could disagree with data_shardings on older jax
+    baxis = shd.batch_axis_entry(B, mesh)
     return jax.jit(
         fn,
         in_shardings=(pshard, ishard),
@@ -203,8 +204,7 @@ def jit_serve_step(cfg, mesh, params_abstract, inputs_abstract, *,
     pshard = shd.param_shardings(params_abstract, mesh, fsdp=fsdp_serve)
     ishard = serve_input_shardings(inputs_abstract, cfg, mesh)
     B = inputs_abstract["tokens"].shape[0]
-    bspec = shd.batch_spec(B, mesh)
-    baxis = bspec[0] if len(bspec) > 0 else None
+    baxis = shd.batch_axis_entry(B, mesh)
     return jax.jit(
         fn,
         in_shardings=(pshard, ishard),

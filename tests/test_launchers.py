@@ -1,8 +1,12 @@
-"""CLI driver smokes: train + serve on reduced configs (the example paths)."""
+"""CLI driver smokes: train + serve on reduced configs (the example paths),
+plus data_shardings edge cases the drivers feed it (0-d leaves)."""
+import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.launch.serve import main as serve_main
 from repro.launch.train import main as train_main
+from repro.runtime import sharding as shd
 
 
 def test_train_cli_reduced(tmp_path):
@@ -29,3 +33,30 @@ def test_serve_cli_encdec(tmp_path):
         "--prompt-len", "8", "--gen", "3", "--strategy", "xla",
     ])
     assert gen.shape == (2, 3)
+
+
+def test_serve_cli_arrival_simulation(tmp_path):
+    """More requests than slots, staggered arrivals — the continuous-
+    batching path of the engine behind the CLI."""
+    gen = serve_main([
+        "--arch", "olmoe-1b-7b", "--reduced", "--batch", "2",
+        "--requests", "3", "--arrival-every", "1",
+        "--prompt-len", "8", "--gen", "3", "--strategy", "xla",
+        "--plan-cache", str(tmp_path / "plans.json"),
+    ])
+    assert gen.shape == (3, 3)
+
+
+def test_data_shardings_replicates_scalar_leaves():
+    """0-d leaves (step counters, scalar metrics) used to raise IndexError
+    (``spec[batch_axis]`` on an empty spec list); they replicate now."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    tree = {"tokens": jnp.zeros((4, 8), jnp.int32),
+            "step": jnp.zeros((), jnp.int32),
+            "flag": jnp.zeros((3,), jnp.int32)}
+    out = shd.data_shardings(tree, mesh)
+    assert out["step"].spec == P()
+    assert out["tokens"].spec == P("data", None)
+    # batch_axis past a leaf's rank also degrades to replicated
+    out1 = shd.data_shardings({"x": jnp.zeros((5,))}, mesh, batch_axis=1)
+    assert out1["x"].spec == P()

@@ -75,6 +75,21 @@ def test_batch_spec_divisibility():
     assert shd.batch_spec(1, m) == P(None)
 
 
+def test_batch_axis_entry_normalization():
+    """The single helper behind data_shardings AND the step out_shardings:
+    singleton tuples normalize to the bare axis name (older jax compares
+    P(("data",)) and P("data") unequal, which made prefill/serve
+    out_shardings disagree with the input shardings)."""
+    m = FakeMesh({"data": 4, "model": 2})
+    assert shd.batch_axis_entry(8, m) == "data"          # NOT ("data",)
+    assert shd.batch_axis_entry(3, m) is None
+    multi = FakeMesh({"pod": 2, "data": 2, "model": 2})
+    assert shd.batch_axis_entry(4, multi) == ("pod", "data")
+    # the entry data_shardings uses is exactly this helper's output
+    assert shd.batch_axis_entry(8, m) == \
+        shd._axis_entry(shd.batch_spec(8, m))
+
+
 def test_collective_parser_counts_loops():
     hlo = """
 %cond.1 (arg: (s32[], f32[8])) -> pred[] {
