@@ -303,6 +303,69 @@ def bench_serving(out_path: str = "BENCH_serving.json") -> dict:
     return blob
 
 
+# ---------------------------------------------------------------------------
+# Paged-KV sweep: ring vs paged engine at several prefix-share ratios —
+# the KV cache is the other HBM-bound serving tensor (PAPER/LiquidGEMM);
+# this persists throughput + peak pages as BENCH_paged_kv.json (CI artifact)
+# ---------------------------------------------------------------------------
+
+def bench_paged_kv(out_path: str = "BENCH_paged_kv.json") -> dict:
+    """Ring vs paged engine decode at three prefix-share ratios (fraction
+    of requests repeating one prompt): tokens/sec, peak live pages, and
+    the zero-sharing worst case — the paged cache's capacity win."""
+    import dataclasses
+
+    from repro import configs
+    from repro.models import transformer as T
+    from repro.runtime.engine import Request, ServingEngine
+
+    print("# paged_kv: name,us_per_call,derived(tok/s)")
+    arch, P, G, B, R = "h2o-danube-1.8b", 8, 8, 4, 4
+    cfg = dataclasses.replace(configs.get_reduced(arch),
+                              w4a16_strategy="auto",
+                              quant_format=BENCH_FORMAT)
+    key = jax.random.PRNGKey(0)
+    params = T.quantize_params(T.init_params(key, cfg), cfg, min_size=0)
+    tokens = jax.random.randint(key, (R, P), 0, cfg.vocab_size)
+
+    def requests(share_ratio):
+        # the first ceil(share_ratio * R) requests repeat prompt 0
+        n_shared = int(round(share_ratio * R))
+        return [Request(rid=i,
+                        prompt=tokens[0] if i < n_shared else tokens[i],
+                        max_new_tokens=G) for i in range(R)]
+
+    cells = []
+    for ratio in (0.0, 0.5, 1.0):
+        for mode in ("ring", "paged"):
+            engine = ServingEngine(
+                cfg, params, max_batch=B, max_prompt_len=P,
+                max_new_tokens=G, paged=(mode == "paged"), page_size=4,
+                prefill_chunk=4 if mode == "paged" else None)
+            report = engine.run(requests(ratio))
+            ms_step = (report.decode_s
+                       / max(len(report.step_records), 1)) * 1e3
+            name = f"paged_kv/{arch}/{mode}/share{ratio:.1f}"
+            print(f"{name},{ms_step*1e3:.1f},{report.tokens_per_s:.2f}")
+            cells.append({
+                "name": name, "arch": arch, "mode": mode,
+                "share_ratio": ratio, "batch": B, "prompt_len": P,
+                "gen": G, "tok_per_s": round(report.tokens_per_s, 3),
+                "ms_per_step": round(ms_step, 3),
+                "prefill_ms": round(report.prefill_s * 1e3, 3),
+                "peak_pages": report.peak_pages,
+                "worst_case_pages": (engine.pages_slot * B
+                                     if engine.paged else None),
+                "cache_len": engine.cache_len,
+            })
+    blob = {"format": BENCH_FORMAT, "backend": jax.default_backend(),
+            "cells": cells}
+    with open(out_path, "w") as f:
+        json.dump(blob, f, indent=1, sort_keys=True)
+    print(f"# paged_kv: wrote {len(cells)} cells -> {out_path}")
+    return blob
+
+
 BENCHES = {
     "fig2": bench_fig2_splitk_vs_dataparallel,
     "fig3": bench_fig3_w4a16_vs_fp16,
@@ -311,6 +374,7 @@ BENCHES = {
     "plans": bench_plans,
     "formats": bench_formats,
     "serving": bench_serving,
+    "paged_kv": bench_paged_kv,
 }
 
 
@@ -320,9 +384,10 @@ def main(argv=None) -> None:
                     help=f"subset of {list(BENCHES)} (default: all)")
     ap.add_argument("--quick", action="store_true",
                     help="run the quick perf snapshot, the fused-format "
-                         "sweep, and the serving sweep, writing "
-                         "BENCH_quickstart.json, BENCH_formats.json and "
-                         "BENCH_serving.json (the CI artifacts)")
+                         "sweep, the serving sweep and the ring-vs-paged "
+                         "KV sweep, writing BENCH_quickstart.json, "
+                         "BENCH_formats.json, BENCH_serving.json and "
+                         "BENCH_paged_kv.json (the CI artifacts)")
     ap.add_argument("--format", default=quant.DEFAULT_FORMAT,
                     help="QuantFormat name for quantized benches "
                          "(w4a16_g128 | w8a16_channel | w4a8_g128 | ...)")
@@ -336,6 +401,7 @@ def main(argv=None) -> None:
         bench_quick(args.out)
         bench_formats()
         bench_serving()
+        bench_paged_kv()
         return
     for name in args.benches or list(BENCHES):
         if name not in BENCHES:

@@ -4,8 +4,10 @@ Loads a reduced h2o-danube (SWA) model, quantizes every linear to INT4,
 and runs the continuous-batching engine (runtime/engine.py): requests
 arrive over time, a slot scheduler admits/evicts them per decode step, and
 every decode runs the K≫N small-M GEMM regime where the paper's Split-K
-strategy applies. The planner chooses the kernel per layer ("auto"); its
-decisions persist to a JSON plan cache that later runs (or the train
+strategy applies. Context lives in the paged, prefix-shared KV block pool
+(--page-size / --prefill-chunk / --kv-format; --ring restores the legacy
+per-slot ring caches). The planner chooses the kernel per layer ("auto");
+its decisions persist to a JSON plan cache that later runs (or the train
 driver) warm-start from. Add ``--mesh 2x4`` (with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``) for mesh-sharded
 serving with shard-local plans — see docs/serving.md.
@@ -21,5 +23,7 @@ if __name__ == "__main__":
         "--requests", "8", "--arrival-every", "2",
         "--strategy", "auto",
         "--format", "w4a16_g128",     # or w8a16_channel / w4a8_g128
+        "--page-size", "8", "--prefill-chunk", "16",
+        "--kv-format", "kv_fp16",     # or kv8_channel (per-head INT8 KV)
         "--plan-cache", "/tmp/repro_plan_cache.json",
     ])

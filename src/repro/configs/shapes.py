@@ -38,7 +38,8 @@ def cache_len_for(cfg: ModelConfig, shape: ShapeSpec) -> int:
     return shape.seq_len
 
 
-def serve_cache_len(cfg: ModelConfig, prompt_len: int, gen: int) -> int:
+def serve_cache_len(cfg: ModelConfig, prompt_len: int, gen: int,
+                    page_size: Optional[int] = None) -> int:
     """KV-cache length for serving ``prompt_len`` prompt + ``gen`` new tokens.
 
     Prefill writes ``prompt_len + vision_prefix`` entries and decode advances
@@ -49,8 +50,31 @@ def serve_cache_len(cfg: ModelConfig, prompt_len: int, gen: int) -> int:
     ``enc_kv`` cross-attention cache and never consume decoder positions, so
     they deliberately do NOT widen the decoder cache. Sliding-window archs
     stay bounded by their window.
+
+    With ``page_size`` the length is additionally rounded up to a page
+    multiple — the paged cache's per-slot logical window (a ring larger
+    than the window/total is semantically inert: pos-tag masking hides the
+    extra slots). EVERY cache-sizing call site (ring or paged) must go
+    through this function so the two layouts can never diverge — the PR-4
+    vision-prefix bug class, closed structurally.
     """
     total = prompt_len + (cfg.vision_prefix or 0) + gen
     if cfg.sliding_window > 0:
-        return min(total, cfg.sliding_window)
+        total = min(total, cfg.sliding_window)
+    if page_size:
+        total = -(-total // page_size) * page_size
     return total
+
+
+def serve_num_pages(cfg: ModelConfig, prompt_len: int, gen: int, *,
+                    page_size: int, max_batch: int) -> int:
+    """Physical block-pool size for a paged serving engine.
+
+    ``pages per slot × max_batch`` is the zero-sharing worst case, ``+ 1``
+    for the reserved null block (block 0, permanently empty — unassigned
+    table entries gather it). Prefix sharing only ever *lowers* live pages
+    below this bound; the paged equivalent of :func:`serve_cache_len` and
+    the single place pool capacity is derived.
+    """
+    per_slot = serve_cache_len(cfg, prompt_len, gen, page_size) // page_size
+    return 1 + per_slot * max_batch

@@ -511,3 +511,103 @@ def w4a8_matmul_ref(x: jax.Array, qt: QuantizedTensor) -> jax.Array:
 def quantization_error_bound(qt: QuantizedTensor) -> jax.Array:
     """Per-group max representable rounding error: |w - deq(q(w))| <= s/2."""
     return qt.scales.astype(jnp.float32) / 2.0
+
+
+# ---------------------------------------------------------------------------
+# KV-cache quantization formats
+# ---------------------------------------------------------------------------
+#
+# Weight formats above describe a (K, N) GEMM operand; the KV cache is the
+# *other* serving tensor whose HBM bytes dominate decode (the paper's
+# memory-bound regime, LiquidGEMM's serving-scale point). A KVFormat is the
+# analogous first-class descriptor for how cached K/V token vectors are
+# stored in the paged block pool (runtime/kvcache.py): either the cache
+# dtype verbatim (``kv_fp16``) or INT8 with one dynamic scale per token per
+# KV head (``kv8_channel``), dequantized on gather into the same cache-dtype
+# attention path ``decode_attention`` already uses.
+
+@dataclasses.dataclass(frozen=True)
+class KVFormat:
+    """How cached K/V vectors are stored in the paged KV block pool.
+
+    ``bits=16`` is the passthrough layout (pool holds the cache dtype,
+    no scales). ``bits=8`` stores int8 payloads plus one fp32 scale per
+    (token, kv-head) — "channel" granularity over the head axis, the KV
+    analogue of ``w8a16_channel``'s per-output-channel scales.
+    """
+
+    name: str
+    bits: int = 16                   # 16 (passthrough) | 8
+    scale_granularity: str = "none"  # none | channel (per token, per head)
+
+    def __post_init__(self):
+        if self.bits not in (8, 16):
+            raise ValueError(f"KVFormat bits must be 8 or 16, got {self.bits}")
+        if self.bits == 16 and self.scale_granularity != "none":
+            raise ValueError("16-bit KV passthrough stores no scales")
+        if self.bits == 8 and self.scale_granularity != "channel":
+            raise ValueError("8-bit KV needs per-head 'channel' scales")
+
+    @property
+    def quantized(self) -> bool:
+        return self.bits == 8
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+_KV_FORMAT_REGISTRY: Dict[str, KVFormat] = {}
+DEFAULT_KV_FORMAT = "kv_fp16"
+
+
+def register_kv_format(fmt: KVFormat, *, overwrite: bool = False) -> KVFormat:
+    existing = _KV_FORMAT_REGISTRY.get(fmt.name)
+    if existing is not None and existing != fmt and not overwrite:
+        raise ValueError(
+            f"KV format {fmt.name!r} is already registered with different "
+            f"fields; pass overwrite=True to replace it")
+    _KV_FORMAT_REGISTRY[fmt.name] = fmt
+    return fmt
+
+
+def get_kv_format(name: str) -> KVFormat:
+    try:
+        return _KV_FORMAT_REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown KV-cache format {name!r}; registered: "
+            f"{available_kv_formats()}") from None
+
+
+def available_kv_formats() -> Tuple[str, ...]:
+    return tuple(_KV_FORMAT_REGISTRY)
+
+
+KV_FP16 = register_kv_format(KVFormat("kv_fp16", bits=16,
+                                      scale_granularity="none"))
+KV8_CHANNEL = register_kv_format(KVFormat("kv8_channel", bits=8,
+                                          scale_granularity="channel"))
+
+
+def kv_quantize(x: jax.Array, fmt: KVFormat):
+    """Quantize K/V token vectors ``(..., Hkv, D)`` per ``fmt``.
+
+    Returns ``(payload, scales)``: int8 payload + fp32 per-(token, head)
+    scales for ``kv8_channel``; ``(x, None)`` passthrough for ``kv_fp16``.
+    """
+    if not fmt.quantized:
+        return x, None
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)    # (..., Hkv, 1)
+    s = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(xf / s), -127, 127).astype(jnp.int8)
+    return q, s[..., 0]
+
+
+def kv_dequantize(payload: jax.Array, scales, fmt: KVFormat, dtype):
+    """Inverse of :func:`kv_quantize` — materializes ``dtype`` (the cache
+    dtype the attention dots already run in)."""
+    if not fmt.quantized:
+        return payload.astype(dtype)
+    return (payload.astype(jnp.float32)
+            * scales.astype(jnp.float32)[..., None]).astype(dtype)

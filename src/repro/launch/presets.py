@@ -9,6 +9,9 @@ fits; fsdp_serve additionally shards serving weights over the data axis
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import Optional
+
 import jax.numpy as jnp
 
 from repro.runtime.steps import TrainSettings
@@ -35,3 +38,42 @@ PRESETS = {
 
 def settings_for(arch: str) -> TrainSettings:
     return PRESETS.get(arch, TrainSettings())
+
+
+# ---------------------------------------------------------------------------
+# serving presets: paged KV cache + chunked prefill knobs per arch
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServeSettings:
+    """Per-arch paged-serving defaults (overridable from the serve CLI).
+
+    ``page_size`` trades table length against fragmentation (smaller pages
+    → better prefix-sharing granularity, longer tables); ``prefill_chunk``
+    bounds how many prompt tokens one engine step may spend on prefill
+    (None = whole-prompt prefill — mandatory for recurrent/enc-dec
+    families, whose chunked state threading isn't implemented);
+    ``kv_format`` names a registered KV-cache format (core/quant.py).
+    """
+
+    page_size: int = 16
+    prefill_chunk: Optional[int] = 32
+    kv_format: str = "kv_fp16"
+
+
+SERVE_PRESETS = {
+    # SWA: window-bounded windows are short — small pages share better
+    "h2o-danube-1.8b": ServeSettings(page_size=8, prefill_chunk=32),
+    # vision prefix: chunks cover patch embeds + tokens uniformly
+    "internvl2-1b": ServeSettings(page_size=8, prefill_chunk=32),
+    # recurrent / enc-dec: whole-prompt prefill (chunking unsupported)
+    "rwkv6-7b": ServeSettings(prefill_chunk=None),
+    "whisper-small": ServeSettings(prefill_chunk=None),
+    "hymba-1.5b": ServeSettings(prefill_chunk=None),
+    # 405B-class: big pages keep the block tables short at 32k contexts
+    "llama3-405b": ServeSettings(page_size=64, prefill_chunk=256),
+}
+
+
+def serve_settings_for(arch: str) -> ServeSettings:
+    return SERVE_PRESETS.get(arch, ServeSettings())

@@ -13,6 +13,13 @@ time, decode GEMMs run K≫N with small M — the Split-K regime. The
 ``runtime/engine.py`` scheduler admits/evicts requests per decode step
 (continuous batching) and, on a mesh, plans every layer GEMM on its
 shard-local shape (K/tp row-parallel, N/tp column-parallel).
+
+Context lives in the paged, prefix-shared KV block pool by default
+(``--ring`` restores per-slot ring caches): ``--page-size`` sets the
+block granularity, ``--prefill-chunk`` interleaves long-prompt prefill
+with decode, and ``--kv-format`` picks the KV block storage (``kv_fp16``
+| ``kv8_channel`` per-head INT8) — validated against the registry up
+front. See docs/serving.md.
 """
 from __future__ import annotations
 
@@ -28,8 +35,34 @@ from repro import configs
 from repro.core import quant
 from repro.kernels import planning
 from repro.launch import mesh as launch_mesh
+from repro.launch.presets import serve_settings_for
 from repro.models import transformer as T
 from repro.runtime.engine import Request, ServingEngine
+
+
+def validate_kv_format(kv_format: str, weight_format: str, *,
+                       paged: bool, attn_free: bool = False) -> str:
+    """Resolve/validate the ``--kv-format`` × ``--format`` pair up front.
+
+    Mirrors the planner's forced-pair refusal: a bad combination fails
+    here with the registries' vocabulary instead of deep inside a trace.
+    Both names must be registered, KV quantization requires the paged
+    cache (the ring layout stores raw cache-dtype rows), and attention-free
+    archs (rwkv) hold no KV cache for a format to apply to.
+    """
+    wf = quant.get_format(weight_format)          # raises w/ registry list
+    kf = quant.get_kv_format(kv_format)           # raises w/ registry list
+    if kf.quantized and attn_free:
+        raise ValueError(
+            f"--kv-format {kf.name!r} does not apply to attention-free "
+            f"archs — there is no KV cache to quantize; use kv_fp16")
+    if kf.quantized and not paged:
+        raise ValueError(
+            f"--kv-format {kf.name!r} quantizes KV blocks, which requires "
+            f"the paged cache; drop --ring (or use --kv-format kv_fp16). "
+            f"Registered KV formats: {quant.available_kv_formats()}")
+    del wf  # every (weight, kv) registered pair is currently executable
+    return kf.name
 
 
 def main(argv=None):
@@ -60,6 +93,21 @@ def main(argv=None):
                          "available_formats(): w4a16_g128 | w8a16_channel "
                          "| w4a8_g128 | any registered format); default: "
                          "the config's quant_format")
+    ap.add_argument("--ring", action="store_true",
+                    help="legacy per-slot ring KV caches instead of the "
+                         "paged, prefix-shared block pool (the parity "
+                         "reference; see docs/serving.md)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="paged KV cache: tokens per physical block "
+                         "(default: the arch's ServeSettings preset)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill: max prompt tokens processed per "
+                         "engine step, interleaved with decode; 0 = whole-"
+                         "prompt prefill (default: the arch preset)")
+    ap.add_argument("--kv-format", default=None,
+                    help="KV-cache block format (see repro.core.quant."
+                         "available_kv_formats(): kv_fp16 | kv8_channel); "
+                         "default: the arch preset")
     ap.add_argument("--plan-cache", default=None,
                     help="plan-cache JSON: loaded before serving if present, "
                          "saved (with any new decisions) afterwards")
@@ -81,7 +129,15 @@ def main(argv=None):
 
     cfg = (configs.get_reduced if args.reduced else configs.get_config)(
         args.arch)
+    sset = serve_settings_for(args.arch)
+    paged = not args.ring
+    page_size = args.page_size or sset.page_size
+    prefill_chunk = sset.prefill_chunk if args.prefill_chunk is None \
+        else (args.prefill_chunk or None)
     fmt = quant.get_format(args.format or cfg.quant_format)
+    kv_format = validate_kv_format(args.kv_format or sset.kv_format,
+                                   fmt.name, paged=paged,
+                                   attn_free=cfg.attn_free)
     cfg = dataclasses.replace(cfg, w4a16_strategy=args.strategy,
                               quant_format=fmt.name)
     key = jax.random.PRNGKey(0)
@@ -106,9 +162,16 @@ def main(argv=None):
     R = args.requests or B
     engine = ServingEngine(cfg, params, mesh=mesh, max_batch=B,
                            max_prompt_len=P, max_new_tokens=G,
-                           refine_plans=args.refine_plans)
+                           refine_plans=args.refine_plans, paged=paged,
+                           page_size=page_size, prefill_chunk=prefill_chunk,
+                           kv_format=kv_format)
     print(f"[serve] engine: {B} slots, cache_len {engine.cache_len} "
           f"(prompt {P} + prefix {cfg.vision_prefix or 0} + gen {G})")
+    if engine.paged:
+        print(f"[serve] paged KV: {engine.num_pages} blocks x "
+              f"{engine.page_size} tokens ({engine.pages_slot}/slot), "
+              f"kv_format {engine.kv_format}, prefill_chunk "
+              f"{engine.prefill_chunk or 'whole-prompt'}")
     for lk, plan in sorted(engine.plans.items()):
         print(f"[serve]   plan {lk}: {plan.strategy} "
               f"split_k={plan.split_k} "
@@ -144,6 +207,10 @@ def main(argv=None):
           f"({report.decode_s / max(len(report.step_records), 1) * 1e3:.2f} "
           f"ms/step); latency p50 {p50*1e3:.1f} ms "
           f"max {lat[-1]*1e3 if lat else 0:.1f} ms")
+    if engine.paged:
+        worst = engine.pages_slot * min(B, R)
+        print(f"[serve] pages: peak {report.peak_pages} in use "
+              f"(worst-case {worst} without sharing)")
     print(f"[serve] sample generation (request 0): {report.results[0]}")
     if args.plan_cache:
         n = planning.save_plan_cache(args.plan_cache)

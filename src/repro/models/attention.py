@@ -123,25 +123,52 @@ def decode_attention(
     *,
     window: int = 0,
 ) -> jax.Array:
-    B, Hq, D = q.shape
+    """One-token decode attention over a pos-tagged window: exactly the
+    C=1 case of :func:`prefix_chunk_attention`, kept as a wrapper so the
+    masking and dtype policy exist in one place (a divergence here is the
+    bug class the paged/ring parity suite exists to catch)."""
+    return prefix_chunk_attention(
+        q[:, None], cache, pos[:, None], window=window)[:, 0]
+
+
+def prefix_chunk_attention(
+    q: jax.Array,                # (B, C, Hq, D) — one prefill chunk
+    cache: KVCache,              # gathered window incl. this chunk's K/V
+    qpos: jax.Array,             # (B, C) absolute positions, -1 = padding
+    *,
+    window: int = 0,
+) -> jax.Array:
+    """Chunked-prefill attention: a chunk of queries over a pos-tagged
+    window that already contains the chunk's own K/V (scatter-then-gather),
+    so past context and intra-chunk causality fall out of one mask:
+    ``kpos >= 0 & kpos <= qpos`` (+ sliding window). Padded queries
+    (``qpos < 0``) produce garbage the caller ignores.
+
+    The C × W score block is materialized directly — chunks are bounded by
+    ``prefill_chunk`` (and the window length by ``cache_len``), which is
+    exactly the working-set bound chunked prefill exists to enforce.
+    """
+    B, C, Hq, D = q.shape
     Hkv = cache.k.shape[2]
     G = Hq // Hkv
     scale = D ** -0.5
     # score/readout dots run in the cache dtype with fp32 accumulation —
     # upcasting the cache itself would materialize an f32 copy of the whole
     # KV window every step (2× decode HBM traffic, +12 GB/device at 405B)
-    qg = (q.reshape(B, Hkv, G, D).astype(jnp.float32) * scale).astype(
+    qg = (q.reshape(B, C, Hkv, G, D).astype(jnp.float32) * scale).astype(
         cache.k.dtype)
-    s = jnp.einsum("bhgd,bwhd->bhgw", qg, cache.k,
+    s = jnp.einsum("bchgd,bwhd->bhgcw", qg, cache.k,
                    preferred_element_type=jnp.float32)
-    valid = (cache.pos >= 0) & (cache.pos <= pos[:, None])
+    kpos = cache.pos                                       # (B, W)
+    valid = (kpos[:, None, :] >= 0) & \
+        (kpos[:, None, :] <= qpos[:, :, None])             # (B, C, W)
     if window:
-        valid &= cache.pos > (pos[:, None] - window)
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        valid &= kpos[:, None, :] > (qpos[:, :, None] - window)
+    s = jnp.where(valid[:, None, None, :, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1).astype(cache.v.dtype)
-    out = jnp.einsum("bhgw,bwhd->bhgd", p, cache.v,
+    out = jnp.einsum("bhgcw,bwhd->bchgd", p, cache.v,
                      preferred_element_type=jnp.float32)
-    return out.reshape(B, Hq, D).astype(q.dtype)
+    return out.reshape(B, C, Hq, D).astype(q.dtype)
 
 
 def cache_insert(cache: KVCache, k_new: jax.Array, v_new: jax.Array,

@@ -13,8 +13,12 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.quant import (
+    DEFAULT_KV_FORMAT, get_kv_format, kv_dequantize, kv_quantize,
+)
 from repro.models import attention, layers, moe, rwkv, ssm
 from repro.models.config import ModelConfig
+from repro.runtime import kvcache as kvc
 
 
 # ---------------------------------------------------------------------------
@@ -364,15 +368,21 @@ def prefill(params, cfg: ModelConfig, tokens, *, cache_len: int,
 
 
 def decode_step(params, cfg: ModelConfig, state, tokens: jax.Array,
-                pos: jax.Array):
+                pos: jax.Array, *, tables=None, cache_len: int = 0,
+                kv_format: str = DEFAULT_KV_FORMAT):
     """One decode step. tokens: (B,) int32; pos: (B,) absolute positions.
 
     state: {"cache": stacked per-layer cache, ["enc_kv": ...]} from prefill.
-    Returns (logits (B, V) fp32, new state).
+    With ``tables`` (B, pages_per_slot) the KV entries of ``state`` are
+    paged block pools (``kvcache.PagedKVCache``): each slot's logical ring
+    window is reassembled by gathering its block table, the new token is
+    scattered at ``pos % cache_len``, and the attention math/masking is
+    the unchanged ring path. Returns (logits (B, V) fp32, new state).
     """
     h = layers.embed(params["embed"], tokens)            # (B, d)
     B = h.shape[0]
     H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    kvfmt = get_kv_format(kv_format)
 
     def attn_step(lp, x, kvcache):
         q = layers.shard_hint(
@@ -383,9 +393,16 @@ def decode_step(params, cfg: ModelConfig, state, tokens: jax.Array,
             layers.linear(lp["wv"], x, cfg).reshape(B, Hkv, D), "bhd")
         q = layers.apply_rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
         k = layers.apply_rope(k[:, None], pos[:, None], cfg.rope_theta)[:, 0]
-        kvcache = attention.cache_insert(kvcache, k, v, pos)
-        o = attention.decode_attention(q, kvcache, pos,
-                                       window=cfg.sliding_window)
+        if tables is None:
+            kvcache = attention.cache_insert(kvcache, k, v, pos)
+            o = attention.decode_attention(q, kvcache, pos,
+                                           window=cfg.sliding_window)
+        else:
+            kvcache = kvc.paged_insert(kvcache, tables, k, v, pos,
+                                       cache_len=cache_len, fmt=kvfmt)
+            o = kvc.paged_decode_attention(
+                q, kvcache, tables, pos, window=cfg.sliding_window,
+                fmt=kvfmt, out_dtype=cfg.dtype)
         return layers.linear(lp["wo"], o.reshape(B, H * D), cfg), kvcache
 
     def body(h, xs):
@@ -409,12 +426,12 @@ def decode_step(params, cfg: ModelConfig, state, tokens: jax.Array,
             return h, ce
         x1 = _norm(cfg, lp["norm1"], h)
         if cfg.family == "hybrid":
-            a, kvc = attn_step(lp["attn"], x1, ce["kv"])
+            a, kvnew = attn_step(lp["attn"], x1, ce["kv"])
             s_out, s_new = ssm.ssm_step(lp["ssm"], x1, ce["ssm"], cfg)
             h = h + 0.5 * (a + s_out)
             h = h + _mlp(lp["mlp"], cfg, _norm(cfg, lp["norm2"], h))
-            return h, {"kv": kvc, "ssm": s_new}
-        a, kvc = attn_step(lp["attn"], x1, ce["kv"])
+            return h, {"kv": kvnew, "ssm": s_new}
+        a, kvnew = attn_step(lp["attn"], x1, ce["kv"])
         h = h + a
         if cfg.family == "encdec":
             x3 = _norm(cfg, lp["norm3"], h)
@@ -431,7 +448,7 @@ def decode_step(params, cfg: ModelConfig, state, tokens: jax.Array,
             h = h + y
         else:
             h = h + _mlp(lp["mlp"], cfg, _norm(cfg, lp["norm2"], h))
-        return h, {"kv": kvc}
+        return h, {"kv": kvnew}
 
     xs = (params["layers"], state["cache"])
     if cfg.family == "encdec":
@@ -443,6 +460,107 @@ def decode_step(params, cfg: ModelConfig, state, tokens: jax.Array,
     else:
         logits = layers.linear(params["lm_head"], h, cfg).astype(jnp.float32)
     new_state = dict(state, cache=new_cache)
+    return logits, new_state
+
+
+CHUNKABLE_FAMILIES = ("dense", "moe")
+
+
+def prefill_chunk_step(params, cfg: ModelConfig, state, h: jax.Array,
+                       positions: jax.Array, table: jax.Array, *,
+                       cache_len: int,
+                       kv_format: str = DEFAULT_KV_FORMAT):
+    """One chunked-prefill step for one slot over the paged KV pool.
+
+    h: (1, C, d) embedding chunk (token embeds, or vision-prefix embeds for
+    the leading positions — the engine builds the combined stream);
+    positions: (1, C) absolute positions, -1 = padding in the final chunk;
+    table: (1, T) the slot's block table. Per layer the chunk's K/V are
+    scattered into the slot's pages *first*, then the slot window is
+    gathered back — so past context and intra-chunk causality come from
+    one pos-tag mask (``attention.prefix_chunk_attention``). Only
+    attention-state families chunk (``CHUNKABLE_FAMILIES``); recurrent /
+    encoder-decoder prefill stays whole-prompt (engine fallback).
+
+    Note on MoE: expert-capacity dropping is computed over the routing
+    batch, so chunked prefill (C tokens at a time) can drop different
+    tokens than a whole-prompt pass — chunked MoE prefill is therefore
+    semantically valid but not bit-identical to the fallback (dense
+    families are token-identical; lift ``moe_capacity_factor`` to recover
+    exactness).
+
+    Returns (last-valid-position logits (1, V) fp32, new state).
+    """
+    if cfg.family not in CHUNKABLE_FAMILIES:
+        raise ValueError(f"chunked prefill supports {CHUNKABLE_FAMILIES}, "
+                         f"not family {cfg.family!r}")
+    fmt = get_kv_format(kv_format)
+    B, C, _ = h.shape
+    H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    safe_pos = jnp.maximum(positions, 0)
+
+    def body(hc, xs):
+        lp, pool = xs
+        hc = layers.shard_hint(hc, "bsd")
+        x1 = _norm(cfg, lp["norm1"], hc)
+        ap = lp["attn"]
+        q = layers.shard_hint(
+            layers.linear(ap["wq"], x1, cfg).reshape(B, C, H, D), "bshd")
+        k = layers.shard_hint(
+            layers.linear(ap["wk"], x1, cfg).reshape(B, C, Hkv, D), "bshd")
+        v = layers.shard_hint(
+            layers.linear(ap["wv"], x1, cfg).reshape(B, C, Hkv, D), "bshd")
+        q = layers.apply_rope(q, safe_pos, cfg.rope_theta)
+        k = layers.apply_rope(k, safe_pos, cfg.rope_theta)
+        # gather BEFORE scatter: when the stream wraps the logical window
+        # (prompt > cache_len on SWA archs) the chunk's offsets overwrite
+        # the oldest in-window entries, which this chunk's earliest
+        # queries still attend — so the window is read first and the
+        # chunk's own K/V are appended as an explicit segment. Window
+        # entries at chunk positions (a sharing peer's copy of what this
+        # chunk recomputes, or its decode appends) are masked off to keep
+        # the softmax single-counted.
+        win = kvc.gather_window(pool, table, fmt=fmt, out_dtype=cfg.dtype)
+        start = positions[:, :1]                          # first chunk pos
+        wpos = jnp.where(win.pos < start, win.pos, -1)
+        # the chunk segment takes the same quantize→dequantize round-trip
+        # as its stored copy, so intra-chunk attention sees exactly what
+        # later queries will gather (a no-op for kv_fp16)
+        kr = kv_dequantize(*kv_quantize(k, fmt), fmt=fmt, dtype=cfg.dtype)
+        vr = kv_dequantize(*kv_quantize(v, fmt), fmt=fmt, dtype=cfg.dtype)
+        seq = attention.KVCache(
+            k=jnp.concatenate([win.k, kr.astype(win.k.dtype)], axis=1),
+            v=jnp.concatenate([win.v, vr.astype(win.v.dtype)], axis=1),
+            pos=jnp.concatenate([wpos, positions], axis=1))
+        o = attention.prefix_chunk_attention(q, seq, positions,
+                                             window=cfg.sliding_window)
+        pool = kvc.scatter_chunk(pool, table[0], k[0], v[0], positions[0],
+                                 cache_len=cache_len, fmt=fmt)
+        a = layers.linear(ap["wo"], o.reshape(B, C, H * D), cfg)
+        hc = hc + layers.shard_hint(a, "bsd")
+        if cfg.family == "moe":
+            y, _aux = moe.moe_ffn(
+                lp["moe"], _norm(cfg, lp["norm2"], hc),
+                num_experts=cfg.num_experts, top_k=cfg.experts_per_token,
+                capacity_factor=cfg.moe_capacity_factor, cfg=cfg)
+            hc = hc + y
+        else:
+            hc = hc + _mlp(lp["mlp"], cfg, _norm(cfg, lp["norm2"], hc))
+        return hc, pool
+
+    h, new_pool = jax.lax.scan(body, h, (params["layers"],
+                                         state["cache"]["kv"]))
+    h = _norm(cfg, params["final_norm"], h)
+    last = jnp.maximum(
+        jnp.sum((positions >= 0).astype(jnp.int32), axis=1) - 1, 0)   # (B,)
+    h_last = jnp.take_along_axis(
+        h, last[:, None, None].astype(jnp.int32), axis=1)[:, 0]       # (B, d)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], h_last)
+    else:
+        logits = layers.linear(params["lm_head"], h_last,
+                               cfg).astype(jnp.float32)
+    new_state = dict(state, cache=dict(state["cache"], kv=new_pool))
     return logits, new_state
 
 
@@ -466,6 +584,42 @@ def init_decode_state(cfg: ModelConfig, batch: int, cache_len: int):
                                               cfg.ssm_state)
         cache = jax.tree.map(stack, entry)
     state = {"cache": cache}
+    if cfg.family == "encdec":
+        state["enc_kv"] = (
+            jnp.zeros((cfg.num_layers, batch, cfg.encoder_seq,
+                       cfg.num_kv_heads, cfg.head_dim), cfg.dtype),
+            jnp.zeros((cfg.num_layers, batch, cfg.encoder_seq,
+                       cfg.num_kv_heads, cfg.head_dim), cfg.dtype),
+        )
+    return state
+
+
+def init_paged_state(cfg: ModelConfig, batch: int, cache_len: int, *,
+                     page_size: int, num_blocks: int,
+                     kv_format: str = DEFAULT_KV_FORMAT):
+    """Paged decode state: one shared block pool instead of per-slot rings.
+
+    The per-layer KV entry is a :class:`kvcache.PagedKVCache` of
+    ``num_blocks × page_size`` token slots (stacked over L like every other
+    decode-state leaf); per-slot block tables live OUTSIDE the state — the
+    engine passes them as a step input. Recurrent families (rwkv) hold no
+    KV cache and fall through to the ring state unchanged; hybrid/encdec
+    keep their ssm / enc_kv leaves per-slot as before.
+    """
+    if cfg.family == "rwkv":
+        return init_decode_state(cfg, batch, cache_len)
+    kvc.pages_per_slot(cache_len, page_size)       # validate the multiple
+    L = cfg.num_layers
+
+    def stack(x):
+        return jnp.broadcast_to(x, (L,) + x.shape)
+
+    pool = kvc.init_pool(num_blocks, page_size, cfg.num_kv_heads,
+                         cfg.head_dim, cfg.dtype, kv_format)
+    entry = {"kv": pool}
+    if cfg.family == "hybrid":
+        entry["ssm"] = ssm.ssm_state_init(batch, cfg.d_inner, cfg.ssm_state)
+    state = {"cache": jax.tree.map(stack, entry)}
     if cfg.family == "encdec":
         state["enc_kv"] = (
             jnp.zeros((cfg.num_layers, batch, cfg.encoder_seq,

@@ -9,29 +9,34 @@ the whole pool. This module provides that loop:
   :class:`ServingEngine` — slot scheduler + compiled prefill/decode steps.
   :class:`ServeReport`   — per-request tokens/latency + per-step throughput.
 
+Context is stored in a **paged, prefix-shared KV cache** by default
+(``runtime/kvcache.py``): one physical block pool per layer, per-slot block
+tables, and a ref-counted host-side allocator driven by the admit/evict
+scheduler. Identical prompt prefixes across slots map to the same physical
+blocks (chain-hash index) until the first divergent write copies them apart
+— so B slots serving the same prompt hold ~1 slot's worth of pages. A
+slot's logical window keeps the exact ring layout (token at ``pos %
+cache_len``), which makes paged decode token-identical to the legacy ring
+engine (``paged=False``), SWA/vision-prefix masking included.
+
 Slot lifecycle (see docs/serving.md):
 
-  admit   — a free slot takes the next arrived request; its prompt is
-            prefilled at B=1 and the resulting decode state is written into
-            the slot's row of the pooled state (the whole row, pos ring tags
-            included, so a reused slot can never leak the previous
-            occupant's entries).
-  decode  — one ``serve_step`` over all ``max_batch`` slots; inactive slots
-            compute on empty caches (every op is batch-row independent, so
-            occupied rows are unaffected) and their outputs are ignored.
-  evict   — a finished slot's ring tags are wiped (``cache_reset_slots``)
-            and the slot returns to the free pool.
+  admit   — a free slot takes the next arrived request; its pages are
+            shared-or-allocated and its prompt is prefilled either whole
+            (fallback: recurrent / encoder-decoder families) or in
+            **chunks of ``prefill_chunk`` tokens interleaved with decode
+            steps** — a long prompt no longer stalls decode for the
+            already-running slots.
+  decode  — one ``serve_step`` over all ``max_batch`` slots; inactive
+            slots' writes are redirected into the null block and their
+            outputs ignored.
+  evict   — a finished slot's blocks are dereferenced; blocks reaching
+            refcount 0 get their pos tags wiped and return to the free
+            pool.
 
 On a mesh the steps are jitted with the shardings of ``runtime/steps.py``
-(params TP/FSDP-sharded, state batch- and window-sharded), and the kernel
-plans are chosen **shard-local**: ``plan_for_params(..., mesh=...)`` costs
-the per-rank GEMM (K/tp for row-parallel, N/tp for column-parallel — see
-``kernels/planning.shard_problem``) so Split-K and tiles match the shapes
-each rank actually executes.
-
-The KV cache is sized prefix-aware (``configs.shapes.serve_cache_len``):
-prefill writes ``prompt + vision_prefix`` entries and decode advances from
-that position, so the ring holds ``prompt + prefix + gen`` slots.
+(params TP/FSDP-sharded; pool pages replicated over DP with heads over TP,
+block tables batch-sharded), and kernel plans are chosen shard-local.
 """
 from __future__ import annotations
 
@@ -45,13 +50,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.shapes import serve_cache_len
+from repro.configs.shapes import serve_cache_len, serve_num_pages
 from repro.core import compat
-from repro.core.quant import QuantizedTensor
+from repro.core.quant import (
+    DEFAULT_KV_FORMAT, QuantizedTensor, get_kv_format,
+)
 from repro.kernels import planning
-from repro.models import attention
+from repro.models import attention, layers
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.runtime import kvcache as kvc
 from repro.runtime import sharding as shd
 from repro.runtime import steps as rsteps
 
@@ -90,6 +98,7 @@ class ServeReport:
     decode_s: float = 0.0
     prefill_s: float = 0.0
     step_records: List[dict] = dataclasses.field(default_factory=list)
+    peak_pages: int = 0                    # paged: max live blocks seen
 
     @property
     def tokens_per_s(self) -> float:
@@ -99,24 +108,36 @@ class ServeReport:
 class _Slot:
     """Mutable per-slot scheduler record."""
 
-    __slots__ = ("req", "tokens", "remaining", "pos_next", "t_admit")
+    __slots__ = ("req", "tokens", "remaining", "pos_next", "t_admit",
+                 "phase", "pf_stream", "pf_next", "pf_total", "pf_keys")
 
-    def __init__(self, req: Request, first_token: int, pos0: int,
-                 t_admit: float):
+    def __init__(self, req: Request, pos0: int, t_admit: float):
         self.req = req
-        self.tokens = [first_token]
-        self.remaining = req.max_new_tokens - 1
+        self.tokens: List[int] = []
+        self.remaining = req.max_new_tokens
         self.pos_next = pos0
         self.t_admit = t_admit
+        self.phase = "prefill"          # "prefill" → "active"
+        self.pf_stream = None           # (S_total, d) embedding stream
+        self.pf_next = 0                # next prefill position
+        self.pf_total = 0               # prompt + vision-prefix length
+        self.pf_keys = ([], None)       # prefix-share keys to publish
+
+    def emit_first(self, first_token: int) -> None:
+        self.tokens.append(first_token)
+        self.remaining -= 1
+        self.phase = "active"
 
 
 def insert_slot(state, rstate, slot: int):
     """Write a B=1 prefilled decode state into batch slot ``slot``.
 
-    Every decode-state leaf is (L, B, ...) — KV caches, rwkv/ssm states,
-    encoder cross-attention KV — so one rule covers all families. The whole
-    slot row is overwritten, ring pos tags included: a reused slot can never
-    see a stale entry from its previous occupant.
+    Every per-slot decode-state leaf is (L, B, ...) — ring KV caches,
+    rwkv/ssm states, encoder cross-attention KV — so one rule covers all
+    families. The whole slot row is overwritten, ring pos tags included: a
+    reused slot can never see a stale entry from its previous occupant.
+    (Paged pool leaves are not per-slot; the paged engine scatters into
+    them via ``kvcache.scatter_ring`` instead.)
     """
     return jax.tree.map(
         lambda s, r: s.at[:, slot].set(r[:, 0].astype(s.dtype)),
@@ -124,12 +145,9 @@ def insert_slot(state, rstate, slot: int):
 
 
 def reset_slot(state, slot: int):
-    """Evict ``slot``: wipe its KV ring tags so the row reads as empty.
-
-    Insertion already overwrites the full row, so this is decode hygiene —
-    an evicted slot attends over nothing (uniformly masked scores) instead
-    of the finished request's context while it waits for reuse.
-    """
+    """Evict ``slot`` (ring mode): wipe its KV ring tags so the row reads
+    as empty. The paged engine's counterpart is block-level
+    (``kvcache.reset_blocks`` on blocks whose refcount hits 0)."""
     def visit(leaf):
         if isinstance(leaf, attention.KVCache):
             return attention.cache_reset_slots(leaf, slot)
@@ -142,22 +160,77 @@ def reset_slot(state, slot: int):
 class ServingEngine:
     """Continuous-batching decode over ``max_batch`` request slots.
 
+    ``paged=True`` (default) stores context in the paged, prefix-shared
+    block pool; ``paged=False`` keeps the legacy per-slot ring caches
+    (the reference the parity suite compares against). ``prefill_chunk``
+    enables chunked prefill (attention-state families): at most that many
+    prompt tokens are processed per engine step, interleaved with decode.
+    ``kv_format`` selects the KV block storage (``kv_fp16`` passthrough or
+    ``kv8_channel`` per-head INT8 — paged mode only).
+
     ``mesh=None`` runs single-device (plain ``jax.jit``); with a mesh the
-    prefill/serve steps are jitted with explicit shardings and the kernel
-    plans are chosen shard-local (see module docstring).
+    steps are jitted with explicit shardings and the kernel plans are
+    chosen shard-local (see module docstring).
     """
 
     def __init__(self, cfg: ModelConfig, params, *, mesh=None,
                  max_batch: int = 8, max_prompt_len: int = 128,
                  max_new_tokens: int = 64, refine_plans: bool = False,
-                 cache_len: Optional[int] = None):
+                 cache_len: Optional[int] = None, paged: bool = True,
+                 page_size: int = 16, prefill_chunk: Optional[int] = None,
+                 kv_format: Optional[str] = None,
+                 num_pages: Optional[int] = None):
         self.mesh = mesh
         self.max_batch = int(max_batch)
         self.max_prompt_len = int(max_prompt_len)
         self.max_new_tokens = int(max_new_tokens)
-        self.cache_len = int(cache_len if cache_len is not None
-                             else serve_cache_len(cfg, max_prompt_len,
-                                                  max_new_tokens))
+        # rwkv holds no KV cache at all — "paged" degenerates to the ring
+        # state (nothing to page); everything else pages by default
+        self.paged = bool(paged) and cfg.family != "rwkv"
+        self.page_size = int(page_size)
+        self.kv_format = kv_format or DEFAULT_KV_FORMAT
+        self._kvfmt = get_kv_format(self.kv_format)
+        if self._kvfmt.quantized and not self.paged:
+            if cfg.attn_free:
+                raise ValueError(
+                    f"kv_format {self.kv_format!r} does not apply to "
+                    f"{cfg.family!r} archs — they hold no KV cache to "
+                    f"quantize; use kv_fp16")
+            raise ValueError(
+                f"kv_format {self.kv_format!r} quantizes KV blocks, which "
+                f"needs the paged cache (paged=True)")
+        ps = self.page_size if self.paged else None
+        if cache_len is None:
+            self.cache_len = serve_cache_len(cfg, max_prompt_len,
+                                             max_new_tokens, ps)
+        else:
+            self.cache_len = int(cache_len)
+            if ps:
+                self.cache_len = -(-self.cache_len // ps) * ps
+        if self.paged:
+            self.pages_slot = self.cache_len // self.page_size
+            self.num_pages = int(
+                num_pages if num_pages is not None
+                else serve_num_pages(cfg, max_prompt_len, max_new_tokens,
+                                     page_size=self.page_size,
+                                     max_batch=self.max_batch))
+            if self.num_pages < self.pages_slot + 1:
+                raise ValueError(
+                    f"num_pages={self.num_pages} cannot hold even one "
+                    f"slot's window ({self.pages_slot} pages + the null "
+                    f"block) — the admit gate would wait forever; size "
+                    f"the pool with configs.shapes.serve_num_pages")
+            self.alloc = kvc.BlockAllocator(self.num_pages, self.page_size)
+        else:
+            self.pages_slot = 0
+            self.num_pages = 0
+            self.alloc = None
+        self.prefill_chunk = (None if prefill_chunk is None
+                              else max(1, min(int(prefill_chunk),
+                                              self.cache_len)))
+        self._chunkable = (self.paged and self.prefill_chunk is not None
+                           and cfg.family in T.CHUNKABLE_FAMILIES)
+
         self.plans: Dict[str, planning.KernelPlan] = {}
         if (getattr(cfg, "w4a16_strategy", "auto") == "auto"
                 and getattr(cfg, "w4a16_plan", None) is None
@@ -181,7 +254,13 @@ class ServingEngine:
 
         self._prefill_fns: Dict[tuple, Any] = {}
         self._serve_fn = None
-        self.last_state = None      # decode-state snapshot (tests/debug)
+        self._chunk_fn = None
+        self._embed_fn = None
+        self._tables = None          # (B, pages_slot) np.int32 block tables
+        self._keys_cache: Dict[int, Any] = {}   # id(req) → prefix keys
+        self._reserve: Dict[int, int] = {}      # slot → outstanding worst-
+                                                # case future allocations
+        self.last_state = None       # decode-state snapshot (tests/debug)
 
     # -- compiled steps ----------------------------------------------------
 
@@ -194,16 +273,20 @@ class ServingEngine:
         inputs = {"tokens": prompt}
         cfg = self.cfg
         if cfg.vision_prefix:
-            pe = req.prefix_embeds
-            if pe is None:
-                pe = jnp.zeros((cfg.vision_prefix, cfg.d_model), cfg.dtype)
-            inputs["prefix_embeds"] = jnp.asarray(pe, cfg.dtype)[None]
+            inputs["prefix_embeds"] = self._prefix_embeds(req)[None]
         if cfg.family == "encdec":
             ae = req.audio_embeds
             if ae is None:
                 ae = jnp.zeros((cfg.encoder_seq, cfg.d_model), cfg.dtype)
             inputs["audio_embeds"] = jnp.asarray(ae, cfg.dtype)[None]
         return inputs
+
+    def _prefix_embeds(self, req: Request):
+        pe = req.prefix_embeds
+        if pe is None:
+            pe = jnp.zeros((self.cfg.vision_prefix, self.cfg.d_model),
+                           self.cfg.dtype)
+        return jnp.asarray(pe, self.cfg.dtype)
 
     def _prefill_fn(self, inputs):
         key = tuple(sorted((k, v.shape) for k, v in inputs.items()))
@@ -220,36 +303,336 @@ class ServingEngine:
             self._prefill_fns[key] = fn
         return fn
 
+    def _init_state(self):
+        if self.paged:
+            return T.init_paged_state(
+                self.cfg, self.max_batch, self.cache_len,
+                page_size=self.page_size, num_blocks=self.num_pages,
+                kv_format=self.kv_format)
+        return T.init_decode_state(self.cfg, self.max_batch, self.cache_len)
+
+    def _serve_inputs_abstract(self):
+        inputs = {
+            "state": jax.eval_shape(self._init_state),
+            "tokens": jax.ShapeDtypeStruct((self.max_batch,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((self.max_batch,), jnp.int32),
+        }
+        if self.paged:
+            inputs["tables"] = jax.ShapeDtypeStruct(
+                (self.max_batch, self.pages_slot), jnp.int32)
+        return inputs
+
     def _serve_step(self):
         if self._serve_fn is None:
+            kw = dict(cache_len=self.cache_len, kv_format=self.kv_format)
             if self.mesh is None:
-                self._serve_fn = jax.jit(rsteps.make_serve_step(self.cfg))
+                self._serve_fn = jax.jit(
+                    rsteps.make_serve_step(self.cfg, **kw))
             else:
-                state_abs = jax.eval_shape(
-                    lambda: T.init_decode_state(self.cfg, self.max_batch,
-                                                self.cache_len))
-                inputs_abs = {
-                    "state": state_abs,
-                    "tokens": jax.ShapeDtypeStruct((self.max_batch,),
-                                                   jnp.int32),
-                    "pos": jax.ShapeDtypeStruct((self.max_batch,), jnp.int32),
-                }
+                inputs_abs = self._serve_inputs_abstract()
                 self._state_shardings = shd.decode_state_shardings(
-                    state_abs, self.cfg, self.mesh)
+                    inputs_abs["state"], self.cfg, self.mesh)
                 self._serve_fn = rsteps.jit_serve_step(
                     self.cfg, self.mesh,
-                    jax.eval_shape(lambda: self.params), inputs_abs)
+                    jax.eval_shape(lambda: self.params), inputs_abs, **kw)
         return self._serve_fn
+
+    def _chunk_step(self):
+        if self._chunk_fn is None:
+            C = self.prefill_chunk
+            if self.mesh is None:
+                self._chunk_fn = jax.jit(
+                    rsteps.make_prefill_chunk_step(
+                        self.cfg, self.cache_len,
+                        kv_format=self.kv_format),
+                    donate_argnums=(1,))
+            else:
+                inputs_abs = {
+                    "state": jax.eval_shape(self._init_state),
+                    "h": jax.ShapeDtypeStruct((1, C, self.cfg.d_model),
+                                              self.cfg.dtype),
+                    "positions": jax.ShapeDtypeStruct((1, C), jnp.int32),
+                    "table": jax.ShapeDtypeStruct((1, self.pages_slot),
+                                                  jnp.int32),
+                }  # "state" is split out as its own (donated) argument
+                self._chunk_fn = rsteps.jit_prefill_chunk_step(
+                    self.cfg, self.mesh, self.cache_len,
+                    jax.eval_shape(lambda: self.params), inputs_abs,
+                    kv_format=self.kv_format)
+        return self._chunk_fn
+
+    def _embed(self, tokens):
+        if self._embed_fn is None:
+            self._embed_fn = jax.jit(
+                lambda p, t: layers.embed(p["embed"], t))
+        return self._embed_fn(self.params, tokens)
 
     def _constrain_state(self, state):
         """Pin ``state`` back onto the decode-state shardings. The eager
-        slot insert/reset scatters re-commit leaves with whatever sharding
-        propagation picked; the jitted serve step's in_shardings refuse a
-        committed mismatch, so re-place explicitly (a no-op when already
+        slot insert/reset/scatter ops re-commit leaves with whatever
+        sharding propagation picked; the jitted steps' in_shardings refuse
+        a committed mismatch, so re-place explicitly (a no-op when already
         placed right)."""
         if self.mesh is None:
             return state
         return jax.device_put(state, self._state_shardings)
+
+    # -- paged block bookkeeping ------------------------------------------
+
+    def _pool_map(self, state, fn):
+        return jax.tree.map(
+            lambda l: fn(l) if isinstance(l, kvc.PagedKVCache) else l,
+            state, is_leaf=lambda x: isinstance(x, kvc.PagedKVCache))
+
+    def _consume_reserve(self, i: int) -> None:
+        self._reserve[i] = max(0, self._reserve.get(i, 0) - 1)
+
+    def _slot_alloc(self, i: int) -> int:
+        """Allocate a block on slot ``i``'s behalf, consuming one unit of
+        its admit-time reservation (see :meth:`_required_pages`)."""
+        bid = self.alloc.alloc()
+        self._consume_reserve(i)
+        return bid
+
+    def _ensure_pages(self, state, i: int, offsets):
+        """Make the pages covering logical ``offsets`` writable for slot
+        ``i``: allocate unmapped pages, copy-on-write shared ones (the
+        "first divergent write" of prefix sharing). Returns (state,
+        device_dirty)."""
+        tbl = self._tables[i]
+        dirty = False
+        for p in sorted({o // self.page_size for o in offsets}):
+            bid = int(tbl[p])
+            if bid < 0:
+                tbl[p] = self._slot_alloc(i)
+            elif self.alloc.refcount(bid) > 1:
+                new = self.alloc.cow(bid)
+                self._consume_reserve(i)
+                state = self._pool_map(
+                    state, lambda pool: kvc.copy_blocks(pool, bid, new))
+                tbl[p] = new
+                dirty = True
+            else:
+                # exclusive owner writing in place: the block's published
+                # prefix key (if any) no longer describes its bytes —
+                # without this, a wrapped decode recycles its prompt pages
+                # and a later identical prompt adopts destroyed content
+                self.alloc.unpublish(bid)
+        return state, dirty
+
+    def _prefix_keys(self, req: Request):
+        """(stream length, (full page keys, partial)) for ``req``, hashed
+        once per request: the admit gate re-checks the queue head every
+        step and admit itself needs the keys twice more — device_get'ing
+        and SHA-chaining the prompt (and vision embeds) each time would
+        put per-admit host latency on the serving path. Wrapping streams
+        (longer than the logical window) share nothing: their offsets are
+        no longer page-aligned prefix content."""
+        cached = self._keys_cache.get(id(req))
+        if cached is None:
+            cfg = self.cfg
+            pe = self._prefix_embeds(req) if cfg.vision_prefix else None
+            units = kvc.position_units(req.prompt, pe)
+            seed = b""
+            if cfg.family == "encdec":
+                # decoder K/V at every position depend on the audio via
+                # cross-attention: identical prompts over different audio
+                # must hash to different pages
+                ae = req.audio_embeds
+                if ae is None:
+                    ae = jnp.zeros((cfg.encoder_seq, cfg.d_model), cfg.dtype)
+                seed = np.asarray(
+                    jax.device_get(jnp.asarray(ae, cfg.dtype))).tobytes()
+            S_total = len(units)
+            keys = kvc.page_keys(units, self.page_size, seed=seed) \
+                if S_total <= self.cache_len else ([], None)
+            cached = (S_total, keys)
+            self._keys_cache[id(req)] = cached
+        return cached
+
+    def _try_share(self, i: int, keys) -> int:
+        """Map slot ``i``'s page-aligned prompt prefix onto published
+        blocks; returns how many leading positions are covered."""
+        full_keys, partial = keys
+        tbl = self._tables[i]
+        shared = 0
+        for pi, key in enumerate(full_keys):
+            bid = self.alloc.lookup(key)
+            if bid is None:
+                return shared
+            tbl[pi] = bid
+            shared = (pi + 1) * self.page_size
+        if partial is not None:
+            key, fill = partial
+            bid = self.alloc.lookup(key)
+            if bid is not None:
+                tbl[len(full_keys)] = bid
+                shared = len(full_keys) * self.page_size + fill
+        return shared
+
+    def _publish_keys(self, i: int, slot: _Slot,
+                      upto: Optional[int] = None) -> None:
+        """Index slot ``i``'s prefix pages for sharing. ``upto`` (a prefill
+        progress position) limits publication to *fully written* pages, so
+        chunked prefill publishes incrementally — a concurrently admitted
+        identical prompt adopts pages as its peer produces them."""
+        full_keys, partial = slot.pf_keys
+        tbl = self._tables[i]
+        done = slot.pf_total if upto is None else upto
+        for pi, key in enumerate(full_keys):
+            if (pi + 1) * self.page_size <= done and tbl[pi] >= 0:
+                self.alloc.publish(key, int(tbl[pi]))
+        if partial is not None and done >= slot.pf_total \
+                and tbl[len(full_keys)] >= 0:
+            self.alloc.publish(partial[0], int(tbl[len(full_keys)]))
+
+    def _share_ahead(self, i: int, slot: _Slot) -> None:
+        """Adopt prefix pages published since this slot's admit (typically
+        by a peer prefilling the same prompt a few chunks ahead): any
+        not-yet-written page at the slot's prefill frontier whose key is
+        now indexed maps to the shared block and its positions are
+        skipped. At least the final position is always computed locally
+        (it produces the first token's logits)."""
+        full_keys, partial = slot.pf_keys
+        if not full_keys and partial is None:
+            return          # wrapping stream: sharing disabled, and the
+                            # frontier offset may exceed the table length
+        tbl = self._tables[i]
+        ps = self.page_size
+        while slot.pf_next < slot.pf_total - 1 and slot.pf_next % ps == 0:
+            p = slot.pf_next // ps
+            if tbl[p] >= 0:
+                break
+            if p < len(full_keys):
+                bid = self.alloc.lookup(full_keys[p])
+                if bid is None:
+                    break
+                tbl[p] = bid
+                slot.pf_next = min((p + 1) * ps, slot.pf_total - 1)
+            else:
+                if partial is not None:
+                    bid = self.alloc.lookup(partial[0])
+                    if bid is not None:
+                        tbl[p] = bid
+                        slot.pf_next = min(p * ps + partial[1],
+                                           slot.pf_total - 1)
+                break
+
+    def _required_pages(self, req: Request) -> int:
+        """Worst-case new blocks this request may need over its lifetime
+        (admit gate for under-provisioned pools). Shared prefix pages are
+        discounted, minus one for a potential divergent-write copy — but
+        only when decode cannot wrap the logical window: a wrapping decode
+        may copy-on-write *every* shared page, so no discount applies."""
+        if not self.paged:
+            return 0
+        S_total, (full_keys, partial) = self._prefix_keys(req)
+        if S_total + req.max_new_tokens > self.cache_len:
+            return self.pages_slot
+        shared = 0
+        for key in full_keys:
+            if self.alloc.peek(key) is None:
+                break
+            shared += 1
+        else:
+            if partial is not None and self.alloc.peek(partial[0]) is not None:
+                shared += 1
+        return self.pages_slot - max(0, shared - 1)
+
+    def _evict_paged(self, state, i: int):
+        self._reserve.pop(i, None)
+        freed = [bid for bid in map(int, self._tables[i])
+                 if bid >= 0 and self.alloc.decref(bid)]
+        self._tables[i] = -1
+        if freed:
+            state = self._pool_map(
+                state, lambda pool: kvc.reset_blocks(pool, freed))
+        return state, bool(freed)
+
+    # -- admit paths -------------------------------------------------------
+
+    def _admit_paged(self, state, req: Request, i: int, t0: float):
+        """Set up slot ``i`` for ``req`` on the paged pool. Returns
+        (state, slot, device_dirty): chunked-prefill slots stay in the
+        "prefill" phase (their chunks run inside the decode loop);
+        fallback families prefill whole-prompt right here and emit their
+        first token via ``slot.emit_first``."""
+        self._reserve[i] = self._required_pages(req)
+        S_total, keys = self._prefix_keys(req)
+        self._keys_cache.pop(id(req), None)
+        slot = _Slot(req, self.pos0(req), t0)
+        slot.pf_total = S_total
+        slot.pf_keys = keys
+        shared = min(self._try_share(i, keys), S_total - 1)
+
+        if self._chunkable:
+            emb = self._embed(jnp.asarray(req.prompt, jnp.int32)[None])[0]
+            if self.cfg.vision_prefix:
+                emb = jnp.concatenate(
+                    [self._prefix_embeds(req), emb], axis=0)
+            slot.pf_stream = emb
+            slot.pf_next = shared
+            return state, slot, False
+
+        # whole-prompt fallback (recurrent / encdec / chunking disabled)
+        inputs = self._prefill_inputs(req)
+        logits, rstate = self._prefill_fn(inputs)(self.params, inputs)
+        filled = min(slot.pf_total, self.cache_len)
+        tbl = self._tables[i]
+        for p in range(-(-filled // self.page_size)):
+            if tbl[p] < 0:
+                tbl[p] = self._slot_alloc(i)
+        # scatter the prefilled ring into the pool, skipping shared pages
+        # (their content is already there — writing would clobber the
+        # sharing peer's decode appends in a shared partial page)
+        masked = np.array([
+            -1 if (b >= 0 and self.alloc.refcount(int(b)) > 1) else b
+            for b in tbl], np.int32)
+        fmt = self._kvfmt
+
+        def visit(s, r):
+            if isinstance(s, kvc.PagedKVCache):
+                return kvc.scatter_ring(s, masked, r, fmt=fmt)
+            return s.at[:, i].set(r[:, 0].astype(s.dtype))
+
+        state = jax.tree.map(
+            visit, state, rstate,
+            is_leaf=lambda x: isinstance(x, kvc.PagedKVCache))
+        self._publish_keys(i, slot)
+        slot.emit_first(int(jnp.argmax(logits[0])))
+        return state, slot, True
+
+    def _advance_prefill(self, state, i: int, slot: _Slot):
+        """Run one prefill chunk for slot ``i``; returns (state, dirty)."""
+        C = self.prefill_chunk
+        self._share_ahead(i, slot)
+        start, total = slot.pf_next, slot.pf_total
+        end = min(start + C, total)
+        offsets = {p % self.cache_len for p in range(start, end)}
+        state, dirty = self._ensure_pages(state, i, offsets)
+        if dirty and self.mesh is not None:
+            state = self._constrain_state(state)
+            dirty = False
+        seg = slot.pf_stream[start:end]
+        n = end - start
+        if n < C:
+            pad = jnp.zeros((C - n, seg.shape[-1]), seg.dtype)
+            seg = jnp.concatenate([seg, pad], axis=0)
+        positions = np.full((C,), -1, np.int32)
+        positions[:n] = np.arange(start, end, dtype=np.int32)
+        res = self._chunk_step()(self.params, state, {
+            "h": seg[None],
+            "positions": jnp.asarray(positions)[None],
+            "table": jnp.asarray(self._tables[i:i + 1]),
+        })
+        state = res["state"]
+        slot.pf_next = end
+        if end == total:
+            self._publish_keys(i, slot)
+            slot.emit_first(int(jnp.argmax(res["logits"][0])))
+        else:
+            self._publish_keys(i, slot, upto=end)
+        return state, False
 
     # -- scheduler ---------------------------------------------------------
 
@@ -261,10 +644,12 @@ class ServingEngine:
     def run(self, requests, *, verbose: bool = False) -> ServeReport:
         """Serve ``requests`` to completion; returns a :class:`ServeReport`.
 
-        The scheduler admits arrived requests into free slots each step
-        (prefilling them immediately), runs one batched decode step, and
-        evicts finished slots — continuous batching, not static batching:
-        a long request never blocks short ones from cycling through.
+        The scheduler admits arrived requests into free slots each step,
+        advances at most one prefill chunk per admitting slot, runs one
+        batched decode step over the active slots, and evicts finished
+        slots — continuous batching, not static batching: neither a long
+        request nor (with chunked prefill) a long *prompt* blocks short
+        requests from cycling through.
         """
         for r in requests:
             if len(r.prompt) > self.max_prompt_len:
@@ -283,10 +668,24 @@ class ServingEngine:
             sorted(requests, key=lambda r: (r.arrival_step, r.rid)))
         slots: List[Optional[_Slot]] = [None] * self.max_batch
         report = ServeReport(results={}, latencies={})
+        if self.paged:
+            self._tables = np.full((self.max_batch, self.pages_slot),
+                                   -1, np.int32)
+            self._reserve.clear()
+
+        def finish(state, i, slot):
+            report.results[slot.req.rid] = slot.tokens
+            report.latencies[slot.req.rid] = \
+                time.perf_counter() - slot.t_admit
+            if self.paged:
+                state, d = self._evict_paged(state, i)
+            else:
+                state, d = reset_slot(state, i), True
+            slots[i] = None
+            return state, d
 
         with self._ctx():
-            state = T.init_decode_state(self.cfg, self.max_batch,
-                                        self.cache_len)
+            state = self._init_state()
             state_dirty = True      # needs re-placing onto the serve
                                     # shardings (set after insert/reset)
             tok = np.zeros(self.max_batch, np.int32)
@@ -301,45 +700,89 @@ class ServingEngine:
                         break
                     if slots[i] is not None:
                         continue
+                    if self.paged and (
+                            self._required_pages(waiting[0])
+                            + sum(self._reserve.values())
+                            > self.alloc.pages_free):
+                        break               # pool too full — wait for evicts
                     req = waiting.popleft()
                     t0 = time.perf_counter()
-                    inputs = self._prefill_inputs(req)
-                    logits, rstate = self._prefill_fn(inputs)(
-                        self.params, inputs)
-                    first = int(jnp.argmax(logits[0]))
-                    report.prefill_s += time.perf_counter() - t0
-                    state = insert_slot(state, rstate, i)
-                    state_dirty = True
-                    slot = _Slot(req, first, self.pos0(req), t0)
-                    if slot.remaining == 0:
-                        state = reset_slot(state, i)
-                        report.results[req.rid] = slot.tokens
-                        report.latencies[req.rid] = \
-                            time.perf_counter() - slot.t_admit
+                    if self.paged:
+                        state, slot, d = self._admit_paged(
+                            state, req, i, t0)
+                        state_dirty |= d
                     else:
-                        slots[i] = slot
-                        tok[i], pos[i] = first, slot.pos_next
+                        inputs = self._prefill_inputs(req)
+                        logits, rstate = self._prefill_fn(inputs)(
+                            self.params, inputs)
+                        state = insert_slot(state, rstate, i)
+                        state_dirty = True
+                        slot = _Slot(req, self.pos0(req), t0)
+                        slot.emit_first(int(jnp.argmax(logits[0])))
+                    report.prefill_s += time.perf_counter() - t0
+                    slots[i] = slot
                     admitted += 1
-                active = [i for i, s in enumerate(slots) if s is not None]
+
+                # -- advance chunked prefills ------------------------------
+                for i, s in enumerate(slots):
+                    if s is not None and s.phase == "prefill":
+                        t0 = time.perf_counter()
+                        if state_dirty:
+                            state = self._constrain_state(state)
+                            state_dirty = False
+                        state, d = self._advance_prefill(state, i, s)
+                        state_dirty |= d
+                        report.prefill_s += time.perf_counter() - t0
+
+                # -- settle freshly-activated slots ------------------------
+                for i, s in enumerate(slots):
+                    if s is not None and s.phase == "active" and \
+                            len(s.tokens) == 1 and s.remaining >= 0:
+                        if s.remaining == 0:
+                            state, d = finish(state, i, s)
+                            state_dirty |= d
+                        else:
+                            tok[i], pos[i] = s.tokens[0], s.pos_next
+
+                active = [i for i, s in enumerate(slots)
+                          if s is not None and s.phase == "active"]
                 if not active:
-                    if waiting:       # idle until the next arrival
+                    if waiting or any(s is not None for s in slots):
                         step += 1
                         continue
                     break
 
                 # -- one batched decode step over every slot ---------------
+                if self.paged:
+                    for i in active:
+                        state, d = self._ensure_pages(
+                            state, i, [int(pos[i]) % self.cache_len])
+                        state_dirty |= d
+                    report.peak_pages = max(report.peak_pages,
+                                            self.alloc.pages_in_use)
                 if state_dirty:
-                    # the eager insert/reset scatters re-committed leaves
+                    # eager insert/reset/scatter ops re-committed leaves
                     # off the serve shardings; steady-state steps skip this
                     # (the serve output already carries its out_shardings)
                     state = self._constrain_state(state)
                     state_dirty = False
                 t0 = time.perf_counter()
-                res = serve(self.params, {
+                inputs = {
                     "state": state,
                     "tokens": jnp.asarray(tok),
                     "pos": jnp.asarray(pos),
-                })
+                }
+                if self.paged:
+                    # non-active rows (free, or mid-chunked-prefill) are
+                    # masked to -1: their stale tok/pos writes redirect to
+                    # the null block instead of corrupting real pages (the
+                    # ring engine was immune — each slot owned its row)
+                    step_tables = self._tables.copy()
+                    for i, s in enumerate(slots):
+                        if s is None or s.phase != "active":
+                            step_tables[i] = -1
+                    inputs["tables"] = jnp.asarray(step_tables)
+                res = serve(self.params, inputs)
                 state = res["state"]
                 nxt = np.asarray(res["next"])
                 dt = time.perf_counter() - t0
@@ -360,12 +803,8 @@ class ServingEngine:
                     s.pos_next += 1
                     tok[i], pos[i] = nxt[i], s.pos_next
                     if s.remaining == 0:
-                        report.results[s.req.rid] = s.tokens
-                        report.latencies[s.req.rid] = \
-                            time.perf_counter() - s.t_admit
-                        state = reset_slot(state, i)
-                        state_dirty = True
-                        slots[i] = None
+                        state, d = finish(state, i, s)
+                        state_dirty |= d
                 step += 1
             report.steps = step
             self.last_state = state

@@ -176,12 +176,26 @@ def data_shardings(tree, mesh, *, batch_axis: int = 0):
 def decode_state_shardings(state, cfg, mesh):
     """KV caches: batch over DP axes; cache length over "model" when the
     batch can't use it — sequence-parallel decode attention (beyond-paper
-    distribution; see DESIGN.md)."""
+    distribution; see DESIGN.md).
+
+    Paged-pool leaves (``runtime/kvcache.PagedKVCache``) have no batch dim:
+    pages replicate over the DP axes (every rank sees the whole pool — the
+    block tables are what shard with the batch) and the KV-head dim shards
+    over "model", matching the per-step k/v "bhd" activation sharding so
+    scatter/gather stay rank-local along heads.
+    """
     model = _axis_size(mesh, "model")
 
     def visit(path, leaf):
         names = _names(path)
         spec = [None] * leaf.ndim
+        if any(n in ("k_pool", "v_pool", "k_scale", "v_scale", "page_pos")
+               for n in names):
+            # (L, nb, ps, Hkv, D) / (L, nb, ps, Hkv) / (L, nb, ps):
+            # replicate pages over DP; shard the head dim over model
+            if leaf.ndim >= 4 and _divisible(leaf.shape[3], model):
+                spec[3] = "model"
+            return NamedSharding(mesh, P(*spec))
         # layer-stacked leaves: axis0=L, axis1=B, then shape-specific
         if leaf.ndim >= 2:
             spec[1] = _axis_entry(batch_spec(leaf.shape[1], mesh))

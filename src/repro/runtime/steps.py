@@ -117,14 +117,37 @@ def make_prefill_step(cfg: ModelConfig, cache_len: int):
     return prefill_step
 
 
-def make_serve_step(cfg: ModelConfig):
-    """serve_step(params, inputs={state, tokens, pos}) — one decode step."""
+def make_serve_step(cfg: ModelConfig, *, cache_len: int = 0,
+                    kv_format: str = "kv_fp16"):
+    """serve_step(params, inputs={state, tokens, pos, [tables]}) — one
+    decode step. When ``inputs`` carries per-slot block ``tables`` the KV
+    state is the paged pool and ``cache_len``/``kv_format`` select the
+    slot-window length and KV storage format (see runtime/kvcache.py)."""
     def serve_step(params, inputs):
         logits, state = T.decode_step(
-            params, cfg, inputs["state"], inputs["tokens"], inputs["pos"])
+            params, cfg, inputs["state"], inputs["tokens"], inputs["pos"],
+            tables=inputs.get("tables"), cache_len=cache_len,
+            kv_format=kv_format)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return {"next": next_tok, "logits": logits, "state": state}
     return serve_step
+
+
+def make_prefill_chunk_step(cfg: ModelConfig, cache_len: int, *,
+                            kv_format: str = "kv_fp16"):
+    """chunk_step(params, state, inputs={h, positions, table}) — one
+    chunked-prefill step for one slot (see T.prefill_chunk_step): scatters
+    the chunk's K/V into the slot's pooled pages and returns the updated
+    state plus last-valid-position logits (used when the final chunk
+    completes the prompt). ``state`` is its own argument so the block
+    pool — the largest serving tensor — can be donated without dragging
+    the small non-donatable chunk inputs along."""
+    def chunk_step(params, state, inputs):
+        logits, state = T.prefill_chunk_step(
+            params, cfg, state, inputs["h"], inputs["positions"],
+            inputs["table"], cache_len=cache_len, kv_format=kv_format)
+        return {"logits": logits, "state": state}
+    return chunk_step
 
 
 # ---------------------------------------------------------------------------
@@ -144,11 +167,14 @@ def prefill_input_shardings(inputs_abstract, mesh):
 
 
 def serve_input_shardings(inputs_abstract, cfg, mesh):
-    return {
+    out = {
         "state": shd.decode_state_shardings(inputs_abstract["state"], cfg, mesh),
         "tokens": shd.data_shardings(inputs_abstract["tokens"], mesh),
         "pos": shd.data_shardings(inputs_abstract["pos"], mesh),
     }
+    if "tables" in inputs_abstract:       # paged: (B, pages_per_slot)
+        out["tables"] = shd.data_shardings(inputs_abstract["tables"], mesh)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -199,8 +225,9 @@ def jit_prefill_step(cfg, mesh, cache_len: int, params_abstract,
 
 
 def jit_serve_step(cfg, mesh, params_abstract, inputs_abstract, *,
-                   fsdp_serve=False):
-    fn = make_serve_step(cfg)
+                   fsdp_serve=False, cache_len: int = 0,
+                   kv_format: str = "kv_fp16"):
+    fn = make_serve_step(cfg, cache_len=cache_len, kv_format=kv_format)
     pshard = shd.param_shardings(params_abstract, mesh, fsdp=fsdp_serve)
     ishard = serve_input_shardings(inputs_abstract, cfg, mesh)
     B = inputs_abstract["tokens"].shape[0]
@@ -213,5 +240,32 @@ def jit_serve_step(cfg, mesh, params_abstract, inputs_abstract, *,
             "logits": NamedSharding(mesh, P(baxis, None)),
             "state": ishard["state"],
         },
+        donate_argnums=(1,),
+    )
+
+
+def jit_prefill_chunk_step(cfg, mesh, cache_len, params_abstract,
+                           inputs_abstract, *, kv_format: str = "kv_fp16",
+                           fsdp_serve=False):
+    """Sharded chunked-prefill step: state in/out on the decode-state
+    shardings (the pool replicates pages over DP, shards heads over TP);
+    the B=1 chunk inputs replicate."""
+    fn = make_prefill_chunk_step(cfg, cache_len, kv_format=kv_format)
+    pshard = shd.param_shardings(params_abstract, mesh, fsdp=fsdp_serve)
+    sshard = shd.decode_state_shardings(inputs_abstract["state"], cfg, mesh)
+    ishard = {
+        "h": shd.data_shardings(inputs_abstract["h"], mesh),
+        "positions": shd.data_shardings(inputs_abstract["positions"], mesh),
+        "table": shd.data_shardings(inputs_abstract["table"], mesh),
+    }
+    return jax.jit(
+        fn,
+        in_shardings=(pshard, sshard, ishard),
+        out_shardings={
+            "logits": NamedSharding(mesh, P(None, None)),
+            "state": sshard,
+        },
+        # donate the state: the block pool is the largest serving tensor
+        # and would otherwise be copied whole on every prefill chunk
         donate_argnums=(1,),
     )

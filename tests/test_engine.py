@@ -77,14 +77,15 @@ def test_engine_vision_prefix_ring_regression():
     """Prefill writes P + vision_prefix entries and decode advances from
     pos0 = P + prefix: with the old P+G sizing the pos-tagged ring silently
     overwrote the earliest context. The fixed ring retains position 0
-    through the last decode step."""
+    through the last decode step. (Explicitly the legacy ring engine —
+    the paged parity suite lives in tests/test_kvcache.py.)"""
     cfg = dataclasses.replace(configs.get_reduced("internvl2-1b"),
                               w4a16_strategy="xla")
     P, G = 8, 6
     prefix = cfg.vision_prefix
     params = _params(cfg)
     eng = ServingEngine(cfg, params, max_batch=1, max_prompt_len=P,
-                        max_new_tokens=G)
+                        max_new_tokens=G, paged=False)
     assert eng.cache_len == P + prefix + G
 
     req = _requests(cfg, 1, P, G)[0]

@@ -1,0 +1,580 @@
+"""Paged KV cache tests: block allocator (alloc/free/ref-count, CoW,
+eviction), prefix-share keys, pool device ops, KV quantization formats,
+and the end-to-end parity suite — paged engine decode token-identical to
+the ring engine on danube + internvl2, with and without prefix sharing,
+single-device and TP=2xDP on 8 fake devices (subprocess)."""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.shapes import serve_cache_len, serve_num_pages
+from repro.core import quant
+from repro.models import attention
+from repro.models import transformer as T
+from repro.runtime import kvcache as kvc
+from repro.runtime.engine import Request, ServingEngine
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# sizing (satellite: all cache sizing through configs.shapes)
+# ---------------------------------------------------------------------------
+
+def test_serve_cache_len_page_rounding():
+    vlm = configs.get_reduced("internvl2-1b")            # vision_prefix=8
+    assert serve_cache_len(vlm, 8, 4) == 20
+    assert serve_cache_len(vlm, 8, 4, 8) == 24           # page multiple
+    swa = configs.get_reduced("h2o-danube-1.8b")         # window=16
+    assert serve_cache_len(swa, 30, 10, 16) == 16
+    assert serve_cache_len(swa, 30, 10, 5) == 20         # window rounds up
+
+
+def test_serve_num_pages_worst_case():
+    cfg = configs.get_reduced("olmoe-1b-7b")
+    # cache_len(8,4)=12 → 3 pages of 4 per slot, ×2 slots + null block
+    assert serve_num_pages(cfg, 8, 4, page_size=4, max_batch=2) == 7
+
+
+def test_engine_sizing_routes_through_shapes():
+    cfg = dataclasses.replace(configs.get_reduced("olmoe-1b-7b"),
+                              w4a16_strategy="xla")
+    params = _params(cfg)
+    eng = ServingEngine(cfg, params, max_batch=2, max_prompt_len=8,
+                        max_new_tokens=4, page_size=4)
+    assert eng.cache_len == serve_cache_len(cfg, 8, 4, 4)
+    assert eng.num_pages == serve_num_pages(cfg, 8, 4, page_size=4,
+                                            max_batch=2)
+
+
+# ---------------------------------------------------------------------------
+# block allocator
+# ---------------------------------------------------------------------------
+
+def test_allocator_alloc_free_refcount():
+    a = kvc.BlockAllocator(5, 4)                  # blocks 1..4 usable
+    b1, b2 = a.alloc(), a.alloc()
+    assert b1 != b2 and kvc.NULL_BLOCK not in (b1, b2)
+    assert a.pages_in_use == 2 and a.pages_free == 2
+    a.incref(b1)
+    assert a.refcount(b1) == 2
+    assert not a.decref(b1)                       # still referenced
+    assert a.decref(b1)                           # freed now
+    assert a.pages_in_use == 1 and a.pages_free == 3
+    # eviction returns pages: freed block is allocatable again
+    seen = {a.alloc() for _ in range(3)}
+    assert b1 in seen
+    with pytest.raises(RuntimeError, match="exhausted"):
+        a.alloc()
+
+
+def test_allocator_share_publish_cow():
+    a = kvc.BlockAllocator(6, 4)
+    bid = a.alloc()
+    a.publish("k0", bid)
+    assert a.peek("k0") == bid and a.refcount(bid) == 1   # peek: no ref
+    assert a.lookup("k0") == bid and a.refcount(bid) == 2
+    # CoW: writer gets a private block, shared one keeps its key
+    new = a.cow(bid)
+    assert new != bid and a.refcount(bid) == 1 and a.refcount(new) == 1
+    assert a.peek("k0") == bid
+    with pytest.raises(ValueError, match="not shared"):
+        a.cow(bid)
+    # freeing the published block drops its index entry
+    assert a.decref(bid)
+    assert a.peek("k0") is None
+
+
+def test_page_keys_prefix_property():
+    units = [bytes([i]) for i in range(10)]
+    full, partial = kvc.page_keys(units, 4)
+    assert len(full) == 2 and partial is not None and partial[1] == 2
+    # same prefix → same keys; divergence changes every later key
+    full2, _ = kvc.page_keys(units[:8], 4)
+    assert full2 == full
+    mutated = list(units)
+    mutated[5] = b"\xff"
+    fm, _ = kvc.page_keys(mutated, 4)
+    assert fm[0] == full[0] and fm[1] != full[1]
+    # page keys commit to length too (b"ab"+b"c" != b"a"+b"bc")
+    fa, _ = kvc.page_keys([b"ab", b"c", b"x", b"y"], 4)
+    fb, _ = kvc.page_keys([b"a", b"bc", b"x", b"y"], 4)
+    assert fa != fb
+
+
+# ---------------------------------------------------------------------------
+# pool device ops
+# ---------------------------------------------------------------------------
+
+def _pool(nb=4, ps=2, h=1, d=4, fmt="kv_fp16"):
+    return kvc.init_pool(nb, ps, h, d, jnp.float32, fmt)
+
+
+def test_paged_insert_gather_roundtrip():
+    fmt = quant.get_kv_format("kv_fp16")
+    pool = _pool()
+    tables = jnp.asarray([[1, 2], [3, -1]], jnp.int32)    # 2 slots, T=2
+    k = jnp.ones((2, 1, 4)) * jnp.asarray([1.0, 2.0])[:, None, None]
+    pool = kvc.paged_insert(pool, tables, k, k, jnp.asarray([0, 1]),
+                            cache_len=4, fmt=fmt)
+    win = kvc.gather_window(pool, tables, fmt=fmt, out_dtype=jnp.float32)
+    assert win.k.shape == (2, 4, 1, 4)
+    assert int(win.pos[0, 0]) == 0 and float(win.k[0, 0, 0, 0]) == 1.0
+    assert int(win.pos[1, 1]) == 1 and float(win.k[1, 1, 0, 0]) == 2.0
+    assert np.all(np.asarray(win.pos[0, 1:]) == -1)
+    # unmapped table entries gather the null block: all masked
+    assert np.all(np.asarray(win.pos[1, 2:]) == -1)
+
+
+def test_paged_insert_inactive_slot_hits_null_block():
+    fmt = quant.get_kv_format("kv_fp16")
+    pool = _pool()
+    tables = jnp.asarray([[-1, -1]], jnp.int32)           # inactive slot
+    k = jnp.full((1, 1, 4), 7.0)
+    pool = kvc.paged_insert(pool, tables, k, k, jnp.asarray([3]),
+                            cache_len=4, fmt=fmt)
+    # the write was redirected into block 0 with a -1 tag: harmless
+    assert np.all(np.asarray(pool.page_pos) == -1)
+
+
+def test_copy_and_reset_blocks():
+    fmt = quant.get_kv_format("kv_fp16")
+    pool = _pool()
+    tables = jnp.asarray([[1, -1]], jnp.int32)
+    k = jnp.full((1, 1, 4), 3.0)
+    pool = kvc.paged_insert(pool, tables, k, k, jnp.asarray([0]),
+                            cache_len=4, fmt=fmt)
+    pool = kvc.copy_blocks(pool, 1, 2)
+    assert float(pool.k_pool[2, 0, 0, 0]) == 3.0
+    assert int(pool.page_pos[2, 0]) == 0
+    pool = kvc.reset_blocks(pool, [1])
+    assert np.all(np.asarray(pool.page_pos[1]) == -1)     # wiped
+    assert int(pool.page_pos[2, 0]) == 0                  # copy untouched
+
+
+def test_kv8_quantize_roundtrip():
+    fmt = quant.get_kv_format("kv8_channel")
+    x = jax.random.normal(KEY, (6, 2, 8), jnp.float32) * 3.0
+    q, s = quant.kv_quantize(x, fmt)
+    assert q.dtype == jnp.int8 and s.shape == (6, 2)
+    back = quant.kv_dequantize(q, s, fmt, jnp.float32)
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    bound = np.asarray(s)[..., None] * 0.5 + 1e-6
+    assert np.all(err <= bound)
+    # passthrough format stores verbatim
+    fp = quant.get_kv_format("kv_fp16")
+    q2, s2 = quant.kv_quantize(x, fp)
+    assert s2 is None and q2 is x
+
+
+def test_kv_format_registry_validation():
+    with pytest.raises(ValueError, match="unknown KV-cache format"):
+        quant.get_kv_format("kv4_magic")
+    with pytest.raises(ValueError, match="per-head"):
+        quant.KVFormat("bad", bits=8, scale_granularity="none")
+    from repro.launch.serve import validate_kv_format
+    assert validate_kv_format("kv8_channel", "w4a16_g128",
+                              paged=True) == "kv8_channel"
+    with pytest.raises(ValueError, match="paged"):
+        validate_kv_format("kv8_channel", "w4a16_g128", paged=False)
+    with pytest.raises(ValueError, match="unknown KV-cache format"):
+        validate_kv_format("nope", "w4a16_g128", paged=True)
+    with pytest.raises(ValueError, match="unknown quantization format"):
+        validate_kv_format("kv_fp16", "w3a3", paged=True)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end parity suite: paged engine ≡ ring engine
+# ---------------------------------------------------------------------------
+
+def _params(cfg, quantized=True):
+    p = T.init_params(KEY, cfg)
+    return T.quantize_params(p, cfg, min_size=0) if quantized else p
+
+
+def _requests(cfg, n, P, G, *, same_prompt=False, arrival_every=0):
+    toks = jax.random.randint(KEY, (n, P), 0, cfg.vocab_size)
+    reqs = []
+    for i in range(n):
+        kw = {}
+        if cfg.vision_prefix:
+            kw["prefix_embeds"] = jax.random.normal(
+                jax.random.fold_in(KEY, 0 if same_prompt else i),
+                (cfg.vision_prefix, cfg.d_model), cfg.dtype)
+        if cfg.family == "encdec":
+            kw["audio_embeds"] = jax.random.normal(
+                jax.random.fold_in(KEY, i),
+                (cfg.encoder_seq, cfg.d_model), cfg.dtype)
+        reqs.append(Request(
+            rid=i, prompt=toks[0] if same_prompt else toks[i],
+            max_new_tokens=G, arrival_step=i * arrival_every, **kw))
+    return reqs
+
+
+@pytest.mark.parametrize("arch", ["h2o-danube-1.8b", "internvl2-1b"])
+@pytest.mark.parametrize("chunk", [None, 3])
+def test_paged_engine_parity(arch, chunk):
+    """Paged decode (whole-prompt and chunked prefill) is token-identical
+    to the pre-refactor ring engine — the tentpole acceptance."""
+    cfg = dataclasses.replace(configs.get_reduced(arch),
+                              w4a16_strategy="xla")
+    P, G, n = 8, 4, 2
+    params = _params(cfg)
+    paged = ServingEngine(cfg, params, max_batch=n, max_prompt_len=P,
+                          max_new_tokens=G, page_size=4,
+                          prefill_chunk=chunk)
+    ring = ServingEngine(cfg, params, max_batch=n, max_prompt_len=P,
+                         max_new_tokens=G, paged=False,
+                         cache_len=paged.cache_len)
+    want = ring.run(_requests(cfg, n, P, G)).results
+    got = paged.run(_requests(cfg, n, P, G)).results
+    assert got == want
+
+
+@pytest.mark.parametrize("family_arch", ["whisper-small", "hymba-1.5b",
+                                         "olmoe-1b-7b"])
+def test_paged_engine_parity_fallback_families(family_arch):
+    """Recurrent / enc-dec / MoE families ride the whole-prompt fallback
+    into the pool and still decode token-identically."""
+    cfg = dataclasses.replace(configs.get_reduced(family_arch),
+                              w4a16_strategy="xla")
+    P, G, n = 8, 3, 2
+    params = _params(cfg)
+    paged = ServingEngine(cfg, params, max_batch=n, max_prompt_len=P,
+                          max_new_tokens=G, page_size=4)
+    ring = ServingEngine(cfg, params, max_batch=n, max_prompt_len=P,
+                         max_new_tokens=G, paged=False,
+                         cache_len=paged.cache_len)
+    want = ring.run(_requests(cfg, n, P, G)).results
+    got = paged.run(_requests(cfg, n, P, G)).results
+    assert got == want
+
+
+@pytest.mark.parametrize("chunk,arrival,min_saved", [
+    (None, 0, 3),   # whole-prompt: peer publishes at admit → share all
+    (4, 0, 1),      # lockstep chunked: adopt pages the peer just produced
+    (3, 2, 1),      # staggered chunked: catch-up via share-ahead
+])
+def test_prefix_sharing_reduces_pages_and_keeps_tokens(chunk, arrival,
+                                                       min_saved):
+    """Identical prompts across slots: outputs stay token-identical to the
+    ring engine while pages-in-use drop measurably (shared blocks)."""
+    cfg = dataclasses.replace(configs.get_reduced("internvl2-1b"),
+                              w4a16_strategy="xla")
+    P, G, n = 8, 4, 2
+    params = _params(cfg)
+    paged = ServingEngine(cfg, params, max_batch=n, max_prompt_len=P,
+                          max_new_tokens=G, page_size=4,
+                          prefill_chunk=chunk)
+    ring = ServingEngine(cfg, params, max_batch=n, max_prompt_len=P,
+                         max_new_tokens=G, paged=False,
+                         cache_len=paged.cache_len)
+    shared = paged.run(_requests(cfg, n, P, G, same_prompt=True,
+                                 arrival_every=arrival))
+    want = ring.run(_requests(cfg, n, P, G, same_prompt=True,
+                              arrival_every=arrival)).results
+    assert shared.results == want
+    # distinct prompts for comparison
+    paged2 = ServingEngine(cfg, params, max_batch=n, max_prompt_len=P,
+                           max_new_tokens=G, page_size=4,
+                           prefill_chunk=chunk)
+    distinct = paged2.run(_requests(cfg, n, P, G, arrival_every=arrival))
+    assert shared.peak_pages <= distinct.peak_pages - min_saved
+
+
+def test_cow_on_divergent_write():
+    """Two slots share a partial prompt page; the first decode write into
+    it must copy-on-write — generations diverge, prompt context doesn't."""
+    cfg = dataclasses.replace(configs.get_reduced("olmoe-1b-7b"),
+                              w4a16_strategy="xla")
+    P, G, n = 6, 4, 2                     # 6 % 4 → partial last page
+    params = _params(cfg)
+    eng = ServingEngine(cfg, params, max_batch=n, max_prompt_len=P,
+                        max_new_tokens=G, page_size=4)
+    reqs = _requests(cfg, n, P, G, same_prompt=True)
+    rep = eng.run(reqs)
+    # identical prompts → identical greedy generations, from two slots
+    # whose tables started out aliasing the same partial block
+    assert rep.results[0] == rep.results[1]
+    ring = ServingEngine(cfg, params, max_batch=n, max_prompt_len=P,
+                         max_new_tokens=G, paged=False,
+                         cache_len=eng.cache_len)
+    assert rep.results == ring.run(
+        _requests(cfg, n, P, G, same_prompt=True)).results
+    # and the divergent writes forced private copies: more pages live at
+    # peak than the shared-prefix floor (2 shared pages: 1 full + 1 CoW'd)
+    assert rep.peak_pages > 1
+
+
+def test_paged_slot_reuse_no_leak():
+    """Continuous batching with more requests than slots: freed blocks are
+    recycled across requests without leaking stale context."""
+    cfg = dataclasses.replace(configs.get_reduced("olmoe-1b-7b"),
+                              w4a16_strategy="xla")
+    P, G, n = 8, 3, 5
+    params = _params(cfg)
+    eng = ServingEngine(cfg, params, max_batch=2, max_prompt_len=P,
+                        max_new_tokens=G, page_size=4)
+    report = eng.run(_requests(cfg, n, P, G, arrival_every=1))
+    assert sorted(report.results) == list(range(n))
+    assert all(len(t) == G for t in report.results.values())
+    # after the run every block is back in the free pool
+    assert eng.alloc.pages_in_use == 0
+    assert eng.alloc.pages_free == eng.num_pages - 1
+    # and matches the ring engine's outputs request-for-request
+    ring = ServingEngine(cfg, params, max_batch=2, max_prompt_len=P,
+                         max_new_tokens=G, paged=False,
+                         cache_len=eng.cache_len)
+    assert report.results == ring.run(
+        _requests(cfg, n, P, G, arrival_every=1)).results
+
+
+def test_kv8_channel_engine_close():
+    """kv8_channel decode stays close to fp16 KV: same report shape, and
+    per-step logits dominated by the quantization error bound (token
+    streams may legitimately diverge on a random tiny model)."""
+    cfg = dataclasses.replace(configs.get_reduced("h2o-danube-1.8b"),
+                              w4a16_strategy="xla")
+    P, G, n = 8, 4, 2
+    params = _params(cfg)
+    for chunk in (None, 3):
+        eng = ServingEngine(cfg, params, max_batch=n, max_prompt_len=P,
+                            max_new_tokens=G, page_size=4,
+                            prefill_chunk=chunk, kv_format="kv8_channel")
+        rep = eng.run(_requests(cfg, n, P, G))
+        assert sorted(rep.results) == list(range(n))
+        assert all(len(t) == G for t in rep.results.values())
+
+
+def test_chunked_prefill_wrapping_prompt_parity():
+    """SWA arch with a prompt longer than the window: chunk offsets wrap
+    the logical ring and overwrite its oldest entries — the chunk step
+    must gather the window *before* scattering (its earliest queries
+    still attend those entries) and still match the ring engine."""
+    cfg = dataclasses.replace(configs.get_reduced("h2o-danube-1.8b"),
+                              w4a16_strategy="xla")         # window 16
+    P, G = 40, 4
+    params = _params(cfg)
+    toks = jax.random.randint(KEY, (1, P), 0, cfg.vocab_size)
+    for chunk, ps in ((8, 8), (7, 4)):
+        eng = ServingEngine(cfg, params, max_batch=1, max_prompt_len=P,
+                            max_new_tokens=G, page_size=ps,
+                            prefill_chunk=chunk)
+        rep = eng.run([Request(rid=0, prompt=toks[0], max_new_tokens=G)])
+        ring = ServingEngine(cfg, params, max_batch=1, max_prompt_len=P,
+                             max_new_tokens=G, paged=False,
+                             cache_len=eng.cache_len)
+        want = ring.run([Request(rid=0, prompt=toks[0],
+                                 max_new_tokens=G)]).results
+        assert rep.results == want
+
+
+def test_encdec_same_prompt_different_audio_does_not_share():
+    """Decoder K/V depend on the audio through cross-attention: identical
+    decoder prompts over different audio must not share pages (the page
+    keys are seeded with the audio content) — and identical audio still
+    shares."""
+    cfg = dataclasses.replace(configs.get_reduced("whisper-small"),
+                              w4a16_strategy="xla")
+    P, G, n = 8, 4, 2
+    params = _params(cfg)
+    toks = jax.random.randint(KEY, (1, P), 0, cfg.vocab_size)
+
+    def reqs(same_audio):
+        return [Request(
+            rid=i, prompt=toks[0], max_new_tokens=G,
+            audio_embeds=jax.random.normal(
+                jax.random.fold_in(KEY, 0 if same_audio else i),
+                (cfg.encoder_seq, cfg.d_model), cfg.dtype))
+            for i in range(n)]
+
+    eng = ServingEngine(cfg, params, max_batch=n, max_prompt_len=P,
+                        max_new_tokens=G, page_size=4)
+    ring = ServingEngine(cfg, params, max_batch=n, max_prompt_len=P,
+                         max_new_tokens=G, paged=False,
+                         cache_len=eng.cache_len)
+    rep = eng.run(reqs(same_audio=False))
+    assert rep.results == ring.run(reqs(same_audio=False)).results
+    # identical audio + prompt: pages shared, tokens still right
+    eng2 = ServingEngine(cfg, params, max_batch=n, max_prompt_len=P,
+                        max_new_tokens=G, page_size=4)
+    rep2 = eng2.run(reqs(same_audio=True))
+    assert rep2.results == ring.run(reqs(same_audio=True)).results
+    assert rep2.peak_pages < rep.peak_pages
+
+
+def test_wrapped_decode_unpublishes_recycled_prompt_pages():
+    """A refcount-1 owner's wrapped decode overwrites its own published
+    prompt pages in place; the prefix index must drop those keys or a
+    later identical prompt adopts destroyed content (wrong tokens)."""
+    cfg = dataclasses.replace(configs.get_reduced("h2o-danube-1.8b"),
+                              w4a16_strategy="xla")         # window 16
+    P, G = 14, 10                       # pos0+G = 24 > cache_len: wraps
+    params = _params(cfg)
+    toks = jax.random.randint(KEY, (1, P), 0, cfg.vocab_size)
+
+    def reqs():
+        return [Request(rid=0, prompt=toks[0], max_new_tokens=G),
+                Request(rid=1, prompt=toks[0], max_new_tokens=G,
+                        arrival_step=6)]
+
+    eng = ServingEngine(cfg, params, max_batch=2, max_prompt_len=P,
+                        max_new_tokens=G, page_size=4)
+    ring = ServingEngine(cfg, params, max_batch=2, max_prompt_len=P,
+                         max_new_tokens=G, paged=False,
+                         cache_len=eng.cache_len)
+    assert eng.run(reqs()).results == ring.run(reqs()).results
+
+
+def test_tight_pool_defers_admit_instead_of_crashing():
+    """A pool too small for two zero-sharing lifetimes: the admit gate
+    must account for wrap-time CoW of every shared page (no sharing
+    discount when decode wraps) and defer the second request rather than
+    exhausting the allocator mid-serve."""
+    cfg = dataclasses.replace(configs.get_reduced("h2o-danube-1.8b"),
+                              w4a16_strategy="xla")
+    P, G = 14, 8                        # wraps; pages_slot=4
+    params = _params(cfg)
+    toks = jax.random.randint(KEY, (1, P), 0, cfg.vocab_size)
+
+    def reqs():
+        return [Request(rid=0, prompt=toks[0], max_new_tokens=G),
+                Request(rid=1, prompt=toks[0], max_new_tokens=G,
+                        arrival_step=1)]
+
+    eng = ServingEngine(cfg, params, max_batch=2, max_prompt_len=P,
+                        max_new_tokens=G, page_size=4, num_pages=6)
+    rep = eng.run(reqs())
+    assert sorted(rep.results) == [0, 1]
+    ring = ServingEngine(cfg, params, max_batch=2, max_prompt_len=P,
+                         max_new_tokens=G, paged=False,
+                         cache_len=eng.cache_len)
+    assert rep.results == ring.run(reqs()).results
+
+
+def test_engine_refuses_undersized_pool():
+    """A pool that cannot hold even one slot's window would make the
+    admit gate wait forever — refused at construction instead."""
+    cfg = dataclasses.replace(configs.get_reduced("olmoe-1b-7b"),
+                              w4a16_strategy="xla")
+    with pytest.raises(ValueError, match="null"):
+        ServingEngine(cfg, _params(cfg), max_batch=1, max_prompt_len=8,
+                      max_new_tokens=4, page_size=8, num_pages=2)
+
+
+def test_chunked_prefill_interleaves_with_decode():
+    """A long prompt admitted mid-run is prefilled in chunks across steps
+    while earlier slots keep decoding — decode is never stalled for the
+    whole prompt, and outputs still match the ring engine."""
+    cfg = dataclasses.replace(configs.get_reduced("h2o-danube-1.8b"),
+                              w4a16_strategy="xla")
+    P, G = 12, 6
+    params = _params(cfg)
+    eng = ServingEngine(cfg, params, max_batch=2, max_prompt_len=P,
+                        max_new_tokens=G, page_size=4, prefill_chunk=4)
+    reqs = _requests(cfg, 2, P, G, arrival_every=2)
+    rep = eng.run(reqs)
+    ring = ServingEngine(cfg, params, max_batch=2, max_prompt_len=P,
+                         max_new_tokens=G, paged=False,
+                         cache_len=eng.cache_len)
+    assert rep.results == ring.run(
+        _requests(cfg, 2, P, G, arrival_every=2)).results
+    # request 1 arrives at step 2 with a 12-token prompt and chunk=4: its
+    # prefill spans ≥3 engine steps, during which slot 0 kept decoding
+    decoded_during_admit = [r["active"] for r in rep.step_records
+                            if 2 <= r["step"] < 5]
+    assert decoded_during_admit and all(a >= 1 for a in decoded_during_admit)
+
+
+# ---------------------------------------------------------------------------
+# multi-device parity (subprocess with 8 fake CPU devices)
+# ---------------------------------------------------------------------------
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.kernels import planning
+from repro.launch.mesh import make_local_mesh
+from repro.models import transformer as T
+from repro.runtime.engine import Request, ServingEngine
+
+out = {}
+P, G, R, SLOTS = 8, 5, 3, 2
+
+
+def build_requests(cfg, key, same):
+    toks = jax.random.randint(key, (R, P), 0, cfg.vocab_size)
+    reqs = []
+    for i in range(R):
+        kw = {}
+        if cfg.vision_prefix:
+            kw["prefix_embeds"] = jax.random.normal(
+                jax.random.fold_in(key, 0 if same else i),
+                (cfg.vision_prefix, cfg.d_model), cfg.dtype)
+        reqs.append(Request(rid=i, prompt=toks[0] if same else toks[i],
+                            max_new_tokens=G, arrival_step=i, **kw))
+    return reqs
+
+
+def run_engine(cfg, params, mesh, reqs, **kw):
+    eng = ServingEngine(cfg, params, mesh=mesh, max_batch=SLOTS,
+                        max_prompt_len=P, max_new_tokens=G, page_size=4,
+                        **kw)
+    rep = eng.run(reqs)
+    return {str(k): v for k, v in sorted(rep.results.items())}, rep
+
+
+for arch in ("h2o-danube-1.8b", "internvl2-1b"):
+    cfg = configs.get_reduced(arch)
+    key = jax.random.PRNGKey(0)
+    params = T.quantize_params(T.init_params(key, cfg), cfg, min_size=0)
+    for same in (False, True):
+        planning.PLAN_CACHE.clear()
+        reqs = build_requests(cfg, key, same)
+        single, _ = run_engine(cfg, params, None, reqs, prefill_chunk=3)
+        mesh = make_local_mesh(data=2, model=4)
+        planning.PLAN_CACHE.clear()
+        sharded, rep = run_engine(cfg, params, mesh,
+                                  build_requests(cfg, key, same),
+                                  prefill_chunk=3)
+        tag = f"{arch}/share={same}"
+        out[tag + "/match"] = sharded == single
+        if same:
+            planning.PLAN_CACHE.clear()
+            mesh2 = make_local_mesh(data=1, model=4)
+            distinct, rep_d = run_engine(cfg, params, mesh2,
+                                         build_requests(cfg, key, False),
+                                         prefill_chunk=3)
+            out[tag + "/fewer_pages"] = rep.peak_pages < rep_d.peak_pages
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_paged_engine_parity():
+    """TP=4 x DP=2 paged engine decode (chunked prefill, with and without
+    prefix sharing) is token-identical to single-device paged decode on
+    danube + internvl2, and sharing reduces peak pages on the mesh too."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    res = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert res.returncode == 0, res.stderr[-3000:]
+    line = [l for l in res.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+    assert out and all(out.values()), {k: v for k, v in out.items() if not v}
