@@ -366,6 +366,81 @@ def bench_paged_kv(out_path: str = "BENCH_paged_kv.json") -> dict:
     return blob
 
 
+# ---------------------------------------------------------------------------
+# Speculative-decoding sweep: ngram-proposed verify vs plain paged decode at
+# several prompt-repetition ratios — accepted-tokens/s is the figure of
+# merit, persisted as BENCH_speculative.json (CI artifact)
+# ---------------------------------------------------------------------------
+
+def bench_speculative(out_path: str = "BENCH_speculative.json") -> dict:
+    """Ngram self-speculation vs the plain paged engine on a dense arch
+    (no SWA wrap clamp) at three prompt-repetition ratios. Each config is
+    run twice on the same engine and the warmed run is measured, so the
+    speedup column compares steady-state decode, not compile time.
+    tok/s counts ACCEPTED tokens only — the honest speculative metric."""
+    import dataclasses
+
+    from repro import configs
+    from repro.models import transformer as T
+    from repro.runtime.engine import Request, ServingEngine
+
+    print("# speculative: name,us_per_call,derived(speedup_vs_baseline)")
+    arch, P, G, B, K = "starcoder2-7b", 16, 48, 4, 4
+    cfg = dataclasses.replace(configs.get_reduced(arch),
+                              w4a16_strategy="xla",
+                              quant_format=BENCH_FORMAT)
+    key = jax.random.PRNGKey(0)
+    params = T.quantize_params(T.init_params(key, cfg), cfg, min_size=0)
+
+    def requests(reps):
+        # reps=1: fully random per-request prompts (the ngram worst case);
+        # reps=r: one P/r segment tiled r times, SHARED across the batch —
+        # the prompt-lookup regime code serving actually sees (repetitive
+        # prompts + prefix sharing between concurrent requests)
+        seg = max(2, P // reps)
+        toks = jax.random.randint(jax.random.fold_in(key, reps),
+                                  (B, seg), 0, cfg.vocab_size)
+        return [Request(rid=i,
+                        prompt=jnp.tile(toks[0 if reps > 1 else i],
+                                        -(-P // seg))[:P],
+                        max_new_tokens=G) for i in range(B)]
+
+    def run(speculate, reps):
+        engine = ServingEngine(cfg, params, max_batch=B, max_prompt_len=P,
+                               max_new_tokens=G, page_size=8,
+                               prefill_chunk=8, speculate=speculate,
+                               spec_k=K)
+        engine.run(requests(reps))               # warm: compile + plans
+        return engine.run(requests(reps))
+
+    cells = []
+    for reps in (1, 2, 4):
+        base = run(None, reps)
+        rep = run("ngram", reps)
+        speedup = rep.tokens_per_s / max(base.tokens_per_s, 1e-9)
+        ms_step = (rep.decode_s / max(len(rep.step_records), 1)) * 1e3
+        name = f"speculative/{arch}/ngram_k{K}/reps{reps}"
+        print(f"{name},{ms_step*1e3:.1f},{speedup:.3f}")
+        cells.append({
+            "name": name, "arch": arch, "proposer": "ngram", "spec_k": K,
+            "batch": B, "prompt_len": P, "gen": G, "prompt_reps": reps,
+            "proposed_tokens": rep.proposed_tokens,
+            "accepted_tokens": rep.accepted_tokens,
+            "acceptance_rate": round(rep.acceptance_rate, 4),
+            "steps": rep.steps, "baseline_steps": base.steps,
+            "tok_per_s": round(rep.tokens_per_s, 3),
+            "baseline_tok_per_s": round(base.tokens_per_s, 3),
+            "speedup_vs_baseline": round(speedup, 4),
+            "ms_per_step": round(ms_step, 3),
+        })
+    blob = {"format": BENCH_FORMAT, "backend": jax.default_backend(),
+            "spec_k": K, "cells": cells}
+    with open(out_path, "w") as f:
+        json.dump(blob, f, indent=1, sort_keys=True)
+    print(f"# speculative: wrote {len(cells)} cells -> {out_path}")
+    return blob
+
+
 BENCHES = {
     "fig2": bench_fig2_splitk_vs_dataparallel,
     "fig3": bench_fig3_w4a16_vs_fp16,
@@ -375,6 +450,7 @@ BENCHES = {
     "formats": bench_formats,
     "serving": bench_serving,
     "paged_kv": bench_paged_kv,
+    "speculative": bench_speculative,
 }
 
 
@@ -384,10 +460,11 @@ def main(argv=None) -> None:
                     help=f"subset of {list(BENCHES)} (default: all)")
     ap.add_argument("--quick", action="store_true",
                     help="run the quick perf snapshot, the fused-format "
-                         "sweep, the serving sweep and the ring-vs-paged "
-                         "KV sweep, writing BENCH_quickstart.json, "
-                         "BENCH_formats.json, BENCH_serving.json and "
-                         "BENCH_paged_kv.json (the CI artifacts)")
+                         "sweep, the serving sweep, the ring-vs-paged KV "
+                         "sweep and the speculative sweep, writing "
+                         "BENCH_quickstart.json, BENCH_formats.json, "
+                         "BENCH_serving.json, BENCH_paged_kv.json and "
+                         "BENCH_speculative.json (the CI artifacts)")
     ap.add_argument("--format", default=quant.DEFAULT_FORMAT,
                     help="QuantFormat name for quantized benches "
                          "(w4a16_g128 | w8a16_channel | w4a8_g128 | ...)")
@@ -402,6 +479,7 @@ def main(argv=None) -> None:
         bench_formats()
         bench_serving()
         bench_paged_kv()
+        bench_speculative()
         return
     for name in args.benches or list(BENCHES):
         if name not in BENCHES:

@@ -54,11 +54,16 @@ class ServeSettings:
     (None = whole-prompt prefill — mandatory for recurrent/enc-dec
     families, whose chunked state threading isn't implemented);
     ``kv_format`` names a registered KV-cache format (core/quant.py).
+    ``speculate`` names a draft proposer (``runtime/speculative.py``
+    registry: ``ngram`` | ``draft[:layers=N]``; None = off) and
+    ``spec_k`` how many draft tokens each verify step scores.
     """
 
     page_size: int = 16
     prefill_chunk: Optional[int] = 32
     kv_format: str = "kv_fp16"
+    speculate: Optional[str] = None
+    spec_k: int = 4
 
 
 SERVE_PRESETS = {
@@ -66,6 +71,8 @@ SERVE_PRESETS = {
     "h2o-danube-1.8b": ServeSettings(page_size=8, prefill_chunk=32),
     # vision prefix: chunks cover patch embeds + tokens uniformly
     "internvl2-1b": ServeSettings(page_size=8, prefill_chunk=32),
+    # code serving sees heavy prompt/output repetition — free ngram wins
+    "starcoder2-7b": ServeSettings(speculate="ngram"),
     # recurrent / enc-dec: whole-prompt prefill (chunking unsupported)
     "rwkv6-7b": ServeSettings(prefill_chunk=None),
     "whisper-small": ServeSettings(prefill_chunk=None),

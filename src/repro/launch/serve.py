@@ -37,6 +37,7 @@ from repro.kernels import planning
 from repro.launch import mesh as launch_mesh
 from repro.launch.presets import serve_settings_for
 from repro.models import transformer as T
+from repro.runtime import speculative
 from repro.runtime.engine import Request, ServingEngine
 
 
@@ -108,6 +109,14 @@ def main(argv=None):
                     help="KV-cache block format (see repro.core.quant."
                          "available_kv_formats(): kv_fp16 | kv8_channel); "
                          "default: the arch preset")
+    ap.add_argument("--speculate", default=None,
+                    help="speculative decoding proposer: off | ngram"
+                         "[:max_n] | draft:layers=N (see repro.runtime."
+                         "speculative.available_proposers(); default: the "
+                         "arch preset, usually off)")
+    ap.add_argument("--spec-k", type=int, default=None,
+                    help="draft tokens scored per verify step "
+                         "(default: the arch preset)")
     ap.add_argument("--plan-cache", default=None,
                     help="plan-cache JSON: loaded before serving if present, "
                          "saved (with any new decisions) afterwards")
@@ -138,6 +147,12 @@ def main(argv=None):
     kv_format = validate_kv_format(args.kv_format or sset.kv_format,
                                    fmt.name, paged=paged,
                                    attn_free=cfg.attn_free)
+    speculate = sset.speculate if args.speculate is None \
+        else (args.speculate if args.speculate != "off" else None)
+    spec_k = sset.spec_k if args.spec_k is None else args.spec_k
+    # refuse bad proposer/spec-k pairs up front with the registry's
+    # vocabulary (same contract as --kv-format), not mid-serving-loop
+    speculative.validate_speculate(speculate, spec_k, cfg=cfg, paged=paged)
     cfg = dataclasses.replace(cfg, w4a16_strategy=args.strategy,
                               quant_format=fmt.name)
     key = jax.random.PRNGKey(0)
@@ -160,13 +175,20 @@ def main(argv=None):
     B = args.max_batch or args.batch
     P, G = args.prompt_len, args.gen
     R = args.requests or B
+    proposer = None
+    if speculate is not None:
+        proposer = speculative.make_proposer(speculate, target_cfg=cfg)
     engine = ServingEngine(cfg, params, mesh=mesh, max_batch=B,
                            max_prompt_len=P, max_new_tokens=G,
                            refine_plans=args.refine_plans, paged=paged,
                            page_size=page_size, prefill_chunk=prefill_chunk,
-                           kv_format=kv_format)
+                           kv_format=kv_format, speculate=proposer,
+                           spec_k=spec_k)
     print(f"[serve] engine: {B} slots, cache_len {engine.cache_len} "
           f"(prompt {P} + prefix {cfg.vision_prefix or 0} + gen {G})")
+    if proposer is not None:
+        print(f"[serve] speculative: proposer {proposer.name!r}, "
+              f"k={spec_k} (verify scores {B}x{spec_k + 1} positions/step)")
     if engine.paged:
         print(f"[serve] paged KV: {engine.num_pages} blocks x "
               f"{engine.page_size} tokens ({engine.pages_slot}/slot), "
@@ -211,6 +233,11 @@ def main(argv=None):
         worst = engine.pages_slot * min(B, R)
         print(f"[serve] pages: peak {report.peak_pages} in use "
               f"(worst-case {worst} without sharing)")
+    if proposer is not None:
+        print(f"[serve] speculative: {report.accepted_tokens}/"
+              f"{report.proposed_tokens} drafts accepted "
+              f"({report.acceptance_rate:.0%}); tok/s above counts "
+              f"accepted tokens only")
     print(f"[serve] sample generation (request 0): {report.results[0]}")
     if args.plan_cache:
         n = planning.save_plan_cache(args.plan_cache)

@@ -564,6 +564,86 @@ def prefill_chunk_step(params, cfg: ModelConfig, state, h: jax.Array,
     return logits, new_state
 
 
+def verify_step(params, cfg: ModelConfig, state, tokens: jax.Array,
+                positions: jax.Array, tables: jax.Array, *,
+                cache_len: int, kv_format: str = DEFAULT_KV_FORMAT):
+    """Batched speculative-verify step over the paged KV pool.
+
+    tokens: (B, C) int32 — per slot, the last emitted token followed by up
+    to C-1 draft tokens; positions: (B, C) absolute, -1 = padding (short
+    proposals, inactive rows); tables: (B, T) block tables. One forward
+    pass scores every position of every slot: per layer the batch's K/V
+    are scattered into the pool (``kvcache.scatter_chunks``) and the slot
+    windows gathered back, with ``attention.prefix_chunk_attention``'s
+    pos-tag masking providing past context and intra-window causality —
+    the same math as chunked prefill, so greedy acceptance against the
+    returned per-position argmax is token-identical to plain decode.
+
+    Rejected drafts leave stale pool entries *above* each slot's accepted
+    frontier; their tags exceed every later query position until the next
+    verify window overwrites them, so the masks (`win.pos < start` here,
+    ``kpos <= qpos`` in decode) keep them invisible throughout.
+
+    Returns (logits (B, C, V) fp32 over every position, new state).
+    """
+    if cfg.family not in CHUNKABLE_FAMILIES:
+        raise ValueError(f"speculative verify supports {CHUNKABLE_FAMILIES}, "
+                         f"not family {cfg.family!r}")
+    fmt = get_kv_format(kv_format)
+    h = layers.embed(params["embed"], jnp.maximum(tokens, 0))   # (B, C, d)
+    B, C, _ = h.shape
+    H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    safe_pos = jnp.maximum(positions, 0)
+
+    def body(hc, xs):
+        lp, pool = xs
+        hc = layers.shard_hint(hc, "bsd")
+        x1 = _norm(cfg, lp["norm1"], hc)
+        ap = lp["attn"]
+        q = layers.shard_hint(
+            layers.linear(ap["wq"], x1, cfg).reshape(B, C, H, D), "bshd")
+        k = layers.shard_hint(
+            layers.linear(ap["wk"], x1, cfg).reshape(B, C, Hkv, D), "bshd")
+        v = layers.shard_hint(
+            layers.linear(ap["wv"], x1, cfg).reshape(B, C, Hkv, D), "bshd")
+        q = layers.apply_rope(q, safe_pos, cfg.rope_theta)
+        k = layers.apply_rope(k, safe_pos, cfg.rope_theta)
+        win = kvc.gather_window(pool, tables, fmt=fmt, out_dtype=cfg.dtype)
+        start = positions[:, :1]
+        wpos = jnp.where(win.pos < start, win.pos, -1)
+        kr = kv_dequantize(*kv_quantize(k, fmt), fmt=fmt, dtype=cfg.dtype)
+        vr = kv_dequantize(*kv_quantize(v, fmt), fmt=fmt, dtype=cfg.dtype)
+        seq = attention.KVCache(
+            k=jnp.concatenate([win.k, kr.astype(win.k.dtype)], axis=1),
+            v=jnp.concatenate([win.v, vr.astype(win.v.dtype)], axis=1),
+            pos=jnp.concatenate([wpos, positions], axis=1))
+        o = attention.prefix_chunk_attention(q, seq, positions,
+                                             window=cfg.sliding_window)
+        pool = kvc.scatter_chunks(pool, tables, k, v, positions,
+                                  cache_len=cache_len, fmt=fmt)
+        a = layers.linear(ap["wo"], o.reshape(B, C, H * D), cfg)
+        hc = hc + layers.shard_hint(a, "bsd")
+        if cfg.family == "moe":
+            y, _aux = moe.moe_ffn(
+                lp["moe"], _norm(cfg, lp["norm2"], hc),
+                num_experts=cfg.num_experts, top_k=cfg.experts_per_token,
+                capacity_factor=cfg.moe_capacity_factor, cfg=cfg)
+            hc = hc + y
+        else:
+            hc = hc + _mlp(lp["mlp"], cfg, _norm(cfg, lp["norm2"], hc))
+        return hc, pool
+
+    h, new_pool = jax.lax.scan(body, h, (params["layers"],
+                                         state["cache"]["kv"]))
+    h = _norm(cfg, params["final_norm"], h)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], h)
+    else:
+        logits = layers.linear(params["lm_head"], h, cfg).astype(jnp.float32)
+    new_state = dict(state, cache=dict(state["cache"], kv=new_pool))
+    return logits, new_state
+
+
 def init_decode_state(cfg: ModelConfig, batch: int, cache_len: int):
     """Fresh (empty) decode state — used when lowering decode shapes directly."""
     L = cfg.num_layers

@@ -61,6 +61,7 @@ from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.runtime import kvcache as kvc
 from repro.runtime import sharding as shd
+from repro.runtime import speculative as spec
 from repro.runtime import steps as rsteps
 
 __all__ = ["Request", "ServeReport", "ServingEngine",
@@ -94,25 +95,38 @@ class ServeReport:
     results: Dict[int, List[int]]          # rid → generated token ids
     latencies: Dict[int, float]            # rid → admit→finish seconds
     steps: int = 0
-    decode_tokens: int = 0
+    decode_tokens: int = 0                 # tokens EMITTED (accepted), not
+                                           # positions scored — speculative
+                                           # and baseline runs compare 1:1
     decode_s: float = 0.0
     prefill_s: float = 0.0
     step_records: List[dict] = dataclasses.field(default_factory=list)
     peak_pages: int = 0                    # paged: max live blocks seen
+    proposed_tokens: int = 0               # speculative: drafts scored
+    accepted_tokens: int = 0               # speculative: drafts accepted
 
     @property
     def tokens_per_s(self) -> float:
+        """*Accepted* tokens per decode second (every counted token is a
+        committed output token; rejected drafts cost time, not tokens)."""
         return self.decode_tokens / self.decode_s if self.decode_s else 0.0
+
+    @property
+    def acceptance_rate(self) -> float:
+        return (self.accepted_tokens / self.proposed_tokens
+                if self.proposed_tokens else 0.0)
 
 
 class _Slot:
     """Mutable per-slot scheduler record."""
 
     __slots__ = ("req", "tokens", "remaining", "pos_next", "t_admit",
-                 "phase", "pf_stream", "pf_next", "pf_total", "pf_keys")
+                 "phase", "pf_stream", "pf_next", "pf_total", "pf_keys",
+                 "prompt_ids")
 
     def __init__(self, req: Request, pos0: int, t_admit: float):
         self.req = req
+        self.prompt_ids: Optional[List[int]] = None   # set when speculating
         self.tokens: List[int] = []
         self.remaining = req.max_new_tokens
         self.pos_next = pos0
@@ -179,7 +193,8 @@ class ServingEngine:
                  cache_len: Optional[int] = None, paged: bool = True,
                  page_size: int = 16, prefill_chunk: Optional[int] = None,
                  kv_format: Optional[str] = None,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None,
+                 speculate=None, spec_k: int = 4):
         self.mesh = mesh
         self.max_batch = int(max_batch)
         self.max_prompt_len = int(max_prompt_len)
@@ -231,6 +246,19 @@ class ServingEngine:
         self._chunkable = (self.paged and self.prefill_chunk is not None
                            and cfg.family in T.CHUNKABLE_FAMILIES)
 
+        self.spec_k = int(spec_k)
+        self.proposer: Optional[spec.Proposer] = None
+        if speculate is not None and speculate != "off":
+            if isinstance(speculate, spec.Proposer):
+                spec.validate_speculate(speculate.name, self.spec_k,
+                                        cfg=cfg, paged=self.paged)
+                self.proposer = speculate
+            else:
+                spec.validate_speculate(str(speculate), self.spec_k,
+                                        cfg=cfg, paged=self.paged)
+                self.proposer = spec.make_proposer(str(speculate),
+                                                   target_cfg=cfg)
+
         self.plans: Dict[str, planning.KernelPlan] = {}
         if (getattr(cfg, "w4a16_strategy", "auto") == "auto"
                 and getattr(cfg, "w4a16_plan", None) is None
@@ -239,9 +267,13 @@ class ServingEngine:
                             params,
                             is_leaf=lambda t: isinstance(t, QuantizedTensor)))):
             # pre-plan the decode-regime GEMMs on the shapes each rank will
-            # execute; the per-layer decisions pin the trace-time lookups
+            # execute; the per-layer decisions pin the trace-time lookups.
+            # Speculative verify widens every decode GEMM to M = B*(k+1)
+            # rows — plan at that true local shape, not the M=B decode one
+            M = self.max_batch * (self.spec_k + 1) \
+                if self.proposer is not None else self.max_batch
             self.plans = planning.plan_for_params(
-                params, M=self.max_batch, mesh=mesh, refine=refine_plans)
+                params, M=M, mesh=mesh, refine=refine_plans)
             cfg = dataclasses.replace(cfg, w4a16_plan=self.plans)
         self.cfg = cfg
 
@@ -255,6 +287,7 @@ class ServingEngine:
         self._prefill_fns: Dict[tuple, Any] = {}
         self._serve_fn = None
         self._chunk_fn = None
+        self._verify_fn = None
         self._embed_fn = None
         self._tables = None          # (B, pages_slot) np.int32 block tables
         self._keys_cache: Dict[int, Any] = {}   # id(req) → prefix keys
@@ -361,6 +394,36 @@ class ServingEngine:
                     kv_format=self.kv_format)
         return self._chunk_fn
 
+    def _verify_step(self):
+        """Compiled speculative-verify step: (B, spec_k+1) positions per
+        call, replacing the plain decode step whenever a proposer is
+        wired (a slot with no drafts just pads its row to one live
+        position — byte-identical to plain decode for that slot)."""
+        if self._verify_fn is None:
+            C = self.spec_k + 1
+            if self.mesh is None:
+                self._verify_fn = jax.jit(
+                    rsteps.make_verify_step(self.cfg, self.cache_len,
+                                            kv_format=self.kv_format),
+                    donate_argnums=(1,))
+            else:
+                inputs_abs = {
+                    "state": jax.eval_shape(self._init_state),
+                    "tokens": jax.ShapeDtypeStruct((self.max_batch, C),
+                                                   jnp.int32),
+                    "positions": jax.ShapeDtypeStruct((self.max_batch, C),
+                                                      jnp.int32),
+                    "tables": jax.ShapeDtypeStruct(
+                        (self.max_batch, self.pages_slot), jnp.int32),
+                }
+                self._state_shardings = shd.decode_state_shardings(
+                    inputs_abs["state"], self.cfg, self.mesh)
+                self._verify_fn = rsteps.jit_verify_step(
+                    self.cfg, self.mesh, self.cache_len,
+                    jax.eval_shape(lambda: self.params), inputs_abs,
+                    kv_format=self.kv_format)
+        return self._verify_fn
+
     def _embed(self, tokens):
         if self._embed_fn is None:
             self._embed_fn = jax.jit(
@@ -394,17 +457,22 @@ class ServingEngine:
         self._consume_reserve(i)
         return bid
 
-    def _ensure_pages(self, state, i: int, offsets):
+    def _ensure_pages(self, state, i: int, offsets, txn=None):
         """Make the pages covering logical ``offsets`` writable for slot
         ``i``: allocate unmapped pages, copy-on-write shared ones (the
         "first divergent write" of prefix sharing). Returns (state,
-        device_dirty)."""
+        device_dirty). With ``txn`` (a list), every reversible mapping
+        change is recorded — ("alloc", page, bid) / ("cow", page,
+        old_bid, new_bid) — so a speculative step whose drafts get
+        rejected can hand the list to :meth:`_rollback_pages`."""
         tbl = self._tables[i]
         dirty = False
         for p in sorted({o // self.page_size for o in offsets}):
             bid = int(tbl[p])
             if bid < 0:
                 tbl[p] = self._slot_alloc(i)
+                if txn is not None:
+                    txn.append(("alloc", p, int(tbl[p])))
             elif self.alloc.refcount(bid) > 1:
                 new = self.alloc.cow(bid)
                 self._consume_reserve(i)
@@ -412,6 +480,8 @@ class ServingEngine:
                     state, lambda pool: kvc.copy_blocks(pool, bid, new))
                 tbl[p] = new
                 dirty = True
+                if txn is not None:
+                    txn.append(("cow", p, bid, new))
             else:
                 # exclusive owner writing in place: the block's published
                 # prefix key (if any) no longer describes its bytes —
@@ -419,6 +489,40 @@ class ServingEngine:
                 # and a later identical prompt adopts destroyed content
                 self.alloc.unpublish(bid)
         return state, dirty
+
+    def _rollback_pages(self, state, i: int, txn, last_page: int):
+        """Allocator-level rollback of a speculative step's page mappings
+        beyond ``last_page`` (the page holding the last *accepted*
+        position). Fresh allocations are unmapped and freed; CoW'd pages
+        re-adopt the shared block (the copy is dropped before any
+        divergent content was committed) — so a shared prefix is never
+        left pointing at rejected-draft bytes, and in-place unpublishes
+        are never re-published (their tags no longer describe the key).
+        Entries at or below ``last_page`` stay: pos-tag masking keeps a
+        kept page's stale tail invisible until the next window overwrites
+        it. Returns (state, device_dirty)."""
+        tbl = self._tables[i]
+        freed = []
+        for op in reversed(txn):
+            if op[1] <= last_page:
+                continue
+            if op[0] == "alloc":
+                _, p, bid = op
+                tbl[p] = -1
+                if self.alloc.decref(bid):
+                    freed.append(bid)
+            else:                               # ("cow", p, old, new)
+                _, p, old, new = op
+                self.alloc.incref(old)          # retake the shared ref
+                tbl[p] = old
+                if self.alloc.decref(new):
+                    freed.append(new)
+            self._reserve[i] = self._reserve.get(i, 0) + 1
+        if freed:
+            state = self._pool_map(
+                state, lambda pool: kvc.reset_blocks(pool, freed))
+            return state, True
+        return state, False
 
     def _prefix_keys(self, req: Request):
         """(stream length, (full page keys, partial)) for ``req``, hashed
@@ -551,12 +655,31 @@ class ServingEngine:
 
     # -- admit paths -------------------------------------------------------
 
-    def _admit_paged(self, state, req: Request, i: int, t0: float):
+    def _flush_first_tokens(self, pending) -> None:
+        """Emit the first token of every slot whose prefill completed this
+        step. The prefill paths queue ``(slot, last-position logits)``
+        rows here instead of argmax'ing one by one — one device-side
+        argmax over the stacked rows and ONE host transfer replaces a
+        per-slot sync chain."""
+        if not pending:
+            return
+        if len(pending) == 1:
+            slot, row = pending[0]
+            slot.emit_first(int(jnp.argmax(row)))
+            return
+        firsts = np.asarray(
+            jnp.argmax(jnp.stack([row for _, row in pending]), axis=-1))
+        for (slot, _), t in zip(pending, firsts):
+            slot.emit_first(int(t))
+
+    def _admit_paged(self, state, req: Request, i: int, t0: float,
+                     pending):
         """Set up slot ``i`` for ``req`` on the paged pool. Returns
         (state, slot, device_dirty): chunked-prefill slots stay in the
         "prefill" phase (their chunks run inside the decode loop);
-        fallback families prefill whole-prompt right here and emit their
-        first token via ``slot.emit_first``."""
+        fallback families prefill whole-prompt right here and queue their
+        first-token logits on ``pending`` (batch-argmax'd by
+        :meth:`_flush_first_tokens`)."""
         self._reserve[i] = self._required_pages(req)
         S_total, keys = self._prefix_keys(req)
         self._keys_cache.pop(id(req), None)
@@ -599,10 +722,10 @@ class ServingEngine:
             visit, state, rstate,
             is_leaf=lambda x: isinstance(x, kvc.PagedKVCache))
         self._publish_keys(i, slot)
-        slot.emit_first(int(jnp.argmax(logits[0])))
+        pending.append((slot, logits[0]))
         return state, slot, True
 
-    def _advance_prefill(self, state, i: int, slot: _Slot):
+    def _advance_prefill(self, state, i: int, slot: _Slot, pending):
         """Run one prefill chunk for slot ``i``; returns (state, dirty)."""
         C = self.prefill_chunk
         self._share_ahead(i, slot)
@@ -629,7 +752,7 @@ class ServingEngine:
         slot.pf_next = end
         if end == total:
             self._publish_keys(i, slot)
-            slot.emit_first(int(jnp.argmax(res["logits"][0])))
+            pending.append((slot, res["logits"][0]))
         else:
             self._publish_keys(i, slot, upto=end)
         return state, False
@@ -672,6 +795,9 @@ class ServingEngine:
             self._tables = np.full((self.max_batch, self.pages_slot),
                                    -1, np.int32)
             self._reserve.clear()
+        proposer = self.proposer
+        if proposer is not None:
+            proposer.reset(self)
 
         def finish(state, i, slot):
             report.results[slot.req.rid] = slot.tokens
@@ -681,6 +807,8 @@ class ServingEngine:
                 state, d = self._evict_paged(state, i)
             else:
                 state, d = reset_slot(state, i), True
+            if proposer is not None:
+                proposer.evict(self, i)
             slots[i] = None
             return state, d
 
@@ -690,9 +818,12 @@ class ServingEngine:
                                     # shardings (set after insert/reset)
             tok = np.zeros(self.max_batch, np.int32)
             pos = np.zeros(self.max_batch, np.int32)
-            serve = self._serve_step()
+            serve = self._verify_step() if proposer is not None \
+                else self._serve_step()
             step = 0
             while waiting or any(s is not None for s in slots):
+                pending: List[Any] = []     # (slot, logits) rows awaiting
+                                            # their batched first argmax
                 # -- admit arrived requests into free slots ----------------
                 admitted = 0
                 for i in range(self.max_batch):
@@ -709,7 +840,7 @@ class ServingEngine:
                     t0 = time.perf_counter()
                     if self.paged:
                         state, slot, d = self._admit_paged(
-                            state, req, i, t0)
+                            state, req, i, t0, pending)
                         state_dirty |= d
                     else:
                         inputs = self._prefill_inputs(req)
@@ -718,21 +849,31 @@ class ServingEngine:
                         state = insert_slot(state, rstate, i)
                         state_dirty = True
                         slot = _Slot(req, self.pos0(req), t0)
-                        slot.emit_first(int(jnp.argmax(logits[0])))
+                        pending.append((slot, logits[0]))
+                    if proposer is not None:
+                        slot.prompt_ids = [
+                            int(t) for t in
+                            np.asarray(req.prompt).reshape(-1)]
+                        proposer.admit(self, i, slot)
                     report.prefill_s += time.perf_counter() - t0
                     slots[i] = slot
                     admitted += 1
 
                 # -- advance chunked prefills ------------------------------
+                # (pf_stream gates out whole-prompt slots still waiting on
+                # the batched first-token flush below)
                 for i, s in enumerate(slots):
-                    if s is not None and s.phase == "prefill":
+                    if s is not None and s.phase == "prefill" \
+                            and s.pf_stream is not None:
                         t0 = time.perf_counter()
                         if state_dirty:
                             state = self._constrain_state(state)
                             state_dirty = False
-                        state, d = self._advance_prefill(state, i, s)
+                        state, d = self._advance_prefill(state, i, s,
+                                                         pending)
                         state_dirty |= d
                         report.prefill_s += time.perf_counter() - t0
+                self._flush_first_tokens(pending)
 
                 # -- settle freshly-activated slots ------------------------
                 for i, s in enumerate(slots):
@@ -751,6 +892,98 @@ class ServingEngine:
                         step += 1
                         continue
                     break
+
+                # -- speculative: propose → verify → accept → rollback -----
+                if proposer is not None:
+                    k = self.spec_k
+                    views = [spec.ProposalView(
+                        i, slots[i].prompt_ids + slots[i].tokens,
+                        int(pos[i])) for i in active]
+                    t0 = time.perf_counter()
+                    proposals = proposer.propose(views, k)
+                    C = k + 1
+                    ptok = np.zeros((self.max_batch, C), np.int32)
+                    ppos = np.full((self.max_batch, C), -1, np.int32)
+                    n_drafts: Dict[int, int] = {}
+                    txns: Dict[int, list] = {}
+                    for i in active:
+                        s = slots[i]
+                        props = list(proposals.get(i, []))[:k]
+                        # clamp: (a) never emit past the request budget,
+                        # (b) never let the draft overhang wrap the logical
+                        # window — a wrapped speculative write would destroy
+                        # a still-in-window entry, where plain decode only
+                        # ever overwrites the exactly-expiring one
+                        n = min(len(props), s.remaining - 1)
+                        if int(pos[i]) + n >= self.cache_len:
+                            n = max(0, self.cache_len - 1 - int(pos[i]))
+                        n_drafts[i] = n
+                        report.proposed_tokens += n
+                        ptok[i, 0], ppos[i, 0] = tok[i], pos[i]
+                        for j in range(n):
+                            ptok[i, j + 1] = int(props[j])
+                            ppos[i, j + 1] = int(pos[i]) + j + 1
+                        txns[i] = []
+                        state, d = self._ensure_pages(
+                            state, i,
+                            [p % self.cache_len for p in
+                             range(int(pos[i]), int(pos[i]) + n + 1)],
+                            txn=txns[i])
+                        state_dirty |= d
+                    report.peak_pages = max(report.peak_pages,
+                                            self.alloc.pages_in_use)
+                    if state_dirty:
+                        state = self._constrain_state(state)
+                        state_dirty = False
+                    step_tables = self._tables.copy()
+                    for i, s in enumerate(slots):
+                        if s is None or s.phase != "active":
+                            step_tables[i] = -1
+                    res = serve(self.params, state, {
+                        "tokens": jnp.asarray(ptok),
+                        "positions": jnp.asarray(ppos),
+                        "tables": jnp.asarray(step_tables),
+                    })
+                    state = res["state"]
+                    nxt = np.asarray(res["next"])          # (B, C)
+                    dt = time.perf_counter() - t0
+                    report.decode_s += dt
+                    emitted_total = 0
+                    for i in active:
+                        s = slots[i]
+                        # exact greedy acceptance: draft j survives iff it
+                        # equals the target's own argmax at position j-1;
+                        # the first mismatch position contributes the
+                        # target's choice as the bonus token
+                        a = 0
+                        while a < n_drafts[i] and \
+                                int(ptok[i, a + 1]) == int(nxt[i, a]):
+                            a += 1
+                        emitted = [int(nxt[i, j]) for j in range(a + 1)]
+                        report.accepted_tokens += a
+                        state, d = self._rollback_pages(
+                            state, i, txns[i],
+                            ((int(pos[i]) + a) % self.cache_len)
+                            // self.page_size)
+                        state_dirty |= d
+                        emitted_total += len(emitted)
+                        s.tokens.extend(emitted)
+                        s.remaining -= len(emitted)
+                        s.pos_next += len(emitted)
+                        tok[i], pos[i] = emitted[-1], s.pos_next
+                        if s.remaining == 0:
+                            state, d = finish(state, i, s)
+                            state_dirty |= d
+                    report.decode_tokens += emitted_total
+                    report.step_records.append({
+                        "step": step, "active": len(active),
+                        "admitted": admitted, "decode_ms": dt * 1e3,
+                        "emitted": emitted_total})
+                    if verbose:
+                        print(f"[engine] step {step}: active={len(active)} "
+                              f"emitted={emitted_total} {dt*1e3:.2f} ms")
+                    step += 1
+                    continue
 
                 # -- one batched decode step over every slot ---------------
                 if self.paged:

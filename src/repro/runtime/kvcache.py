@@ -49,7 +49,8 @@ from repro.models import attention
 __all__ = [
     "PagedKVCache", "BlockAllocator", "NULL_BLOCK",
     "init_pool", "pages_per_slot", "paged_insert", "paged_decode_attention",
-    "gather_window", "scatter_chunk", "scatter_ring", "copy_blocks",
+    "gather_window", "scatter_chunk", "scatter_chunks", "scatter_ring",
+    "copy_blocks",
     "reset_blocks", "position_units", "page_keys",
 ]
 
@@ -220,6 +221,38 @@ def scatter_chunk(pool: PagedKVCache, table: jax.Array, k_chunk: jax.Array,
                      jnp.arange(C, dtype=jnp.int32) % pool.page_size)
     tag = jnp.where(ok, positions.astype(jnp.int32), -1)
     return _scatter(pool, flat, k_chunk, v_chunk, tag, fmt)
+
+
+def scatter_chunks(pool: PagedKVCache, tables: jax.Array,
+                   k_chunk: jax.Array, v_chunk: jax.Array,
+                   positions: jax.Array, *, cache_len: int,
+                   fmt: KVFormat) -> PagedKVCache:
+    """Batched :func:`scatter_chunk`: C tokens for each of B slots at once
+    (the speculative-verify write path — every active slot lands its draft
+    window in one scatter).
+
+    k_chunk/v_chunk: (B, C, Hkv, D); positions: (B, C) absolute, -1 =
+    padding (shorter-than-C proposals, inactive rows). tables: (B, T).
+    Rows with ``-1`` positions or unmapped pages spread into distinct null
+    block offsets with ``-1`` tags — never a valid entry, and (because
+    each slot's writable pages are exclusively owned after the engine's
+    CoW pass) never a cross-slot collision on a real page.
+    """
+    B, C = positions.shape
+    safe = jnp.maximum(positions, 0)
+    offset = (safe % cache_len).astype(jnp.int32)            # (B, C)
+    page = offset // pool.page_size
+    bid = jnp.take_along_axis(tables, page, axis=1)          # (B, C)
+    ok = (positions >= 0) & (bid >= 0)
+    flat = jnp.where(
+        ok, bid * pool.page_size + offset % pool.page_size,
+        jnp.arange(B * C, dtype=jnp.int32).reshape(B, C) % pool.page_size)
+    tag = jnp.where(ok, positions.astype(jnp.int32), -1)
+    Hkv, D = k_chunk.shape[-2:]
+    return _scatter(pool, flat.reshape(-1),
+                    k_chunk.reshape(B * C, Hkv, D),
+                    v_chunk.reshape(B * C, Hkv, D),
+                    tag.reshape(-1), fmt)
 
 
 def scatter_ring(pool: PagedKVCache, table: np.ndarray,

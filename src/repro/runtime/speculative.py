@@ -1,0 +1,340 @@
+"""Speculative decoding proposers for the paged serving engine.
+
+The paper's decode profile is weight-traffic-bound (K >> N GEMMs at M=1
+fetch the whole weight matrix per generated token); scoring k draft
+tokens in ONE forward pass multiplies tokens-per-weight-fetch, which is
+why ROADMAP calls speculation the biggest tokens/sec lever for this
+stack. This module supplies the *proposal* side; the engine owns the
+batched verify step (``steps.make_verify_step``), exact greedy
+acceptance, and allocator-level rollback.
+
+Two proposers:
+
+  :class:`NgramProposer`       — self-speculation by prompt lookup: the
+      longest recent n-gram match of the slot's context suffix proposes
+      the tokens that followed it. No second model, no extra state —
+      free wins on repetitive prompts/outputs.
+  :class:`DraftModelProposer`  — a small draft model built through the
+      same :class:`~repro.models.config.ModelConfig` machinery, decoding
+      ahead on a pooled (non-paged) ring state. The draft is fed the
+      *accepted* tokens between rounds (catch-up), so its cache always
+      agrees with the target's committed stream.
+
+The contract that keeps verification exact: proposers only ever
+*suggest* tokens. The engine scores suggestion j against the target's
+own greedy choice at the previous position and accepts the longest
+matching prefix — so emitted text is token-identical to non-speculative
+decode no matter how wrong a proposer is.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.shapes import serve_cache_len
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.runtime import steps as rsteps
+
+__all__ = [
+    "Proposer", "ProposalView", "NgramProposer", "DraftModelProposer",
+    "PROPOSERS", "available_proposers", "validate_speculate",
+    "make_proposer",
+]
+
+
+class ProposalView(NamedTuple):
+    """What a proposer sees of one active slot at propose time."""
+
+    slot: int             # batch slot index
+    context: List[int]    # prompt + emitted token ids (committed stream)
+    pos_next: int         # target's next decode position
+
+
+class Proposer:
+    """Draft-token source for speculative decoding.
+
+    Lifecycle (driven by :class:`~repro.runtime.engine.ServingEngine`):
+    ``reset`` once per :meth:`run`, ``admit``/``evict`` as slots turn
+    over, ``propose`` once per decode step for every active slot.
+    Proposals are pure suggestions — length 0..k per slot, clamped and
+    verified by the engine — so implementations never need to know about
+    pages, wrap limits, or remaining-token budgets.
+    """
+
+    name = "base"
+
+    def reset(self, engine) -> None:                 # noqa: D401
+        pass
+
+    def admit(self, engine, i: int, slot) -> None:
+        pass
+
+    def evict(self, engine, i: int) -> None:
+        pass
+
+    def propose(self, views: Sequence[ProposalView], k: int
+                ) -> Dict[int, List[int]]:
+        raise NotImplementedError
+
+
+class NgramProposer(Proposer):
+    """Prompt-lookup self-speculation (no draft model).
+
+    For each slot, match the longest context suffix of length
+    ``max_n..1`` against earlier context and propose the (up to) k
+    tokens that followed the most recent match. Proposes nothing when no
+    n-gram recurs — speculation then degrades to plain decode for that
+    slot, costing one extra scored position.
+    """
+
+    name = "ngram"
+
+    def __init__(self, max_n: int = 3):
+        if max_n < 1:
+            raise ValueError(f"ngram max_n must be >= 1, got {max_n}")
+        self.max_n = int(max_n)
+
+    def propose(self, views, k):
+        out: Dict[int, List[int]] = {}
+        for view in views:
+            ctx = view.context
+            L = len(ctx)
+            props: List[int] = []
+            for n in range(min(self.max_n, L - 1), 0, -1):
+                pat = ctx[L - n:]
+                for j in range(L - n - 1, -1, -1):
+                    if ctx[j:j + n] == pat:
+                        props = ctx[j + n:j + n + k]
+                        break
+                if props:
+                    break
+            if props:
+                out[view.slot] = props
+        return out
+
+
+class DraftModelProposer(Proposer):
+    """Draft-model speculation: a small model decodes k tokens ahead.
+
+    The draft holds a pooled ring decode state (one row per engine slot,
+    the pre-paged layout — the draft never pages). Between rounds it is
+    *caught up* by feeding the accepted real tokens for every position
+    from its frontier to the target's, then chained on its own argmax
+    for the k proposals. Slots whose chain finished early idempotently
+    re-feed their last (token, position) — a same-slot ring overwrite
+    with identical content — which keeps the per-step batch dense.
+
+    Only attention-state families (``T.CHUNKABLE_FAMILIES``) qualify:
+    the re-feed/rewind discipline relies on cache writes being keyed by
+    position (recurrent state mutation is not idempotent).
+    """
+
+    name = "draft"
+
+    def __init__(self, cfg: ModelConfig, params=None, *, seed: int = 1):
+        if cfg.family not in T.CHUNKABLE_FAMILIES:
+            raise ValueError(
+                f"draft speculation needs an attention-state family "
+                f"{T.CHUNKABLE_FAMILIES}, not {cfg.family!r} (its rewind "
+                f"discipline is only idempotent for position-keyed caches)")
+        self.cfg = cfg
+        if params is None:
+            params = T.init_params(jax.random.PRNGKey(seed), cfg)
+        self.params = params
+        self.state = None
+        self._step_fn = None
+        self._prefill_fns: Dict[tuple, object] = {}
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def reset(self, engine) -> None:
+        cfg = self.cfg
+        if cfg.vision_prefix != (engine.cfg.vision_prefix or 0) or (
+                cfg.vision_prefix and cfg.d_model != engine.cfg.d_model):
+            raise ValueError(
+                f"draft cfg must match the target's vision frontend "
+                f"(vision_prefix {cfg.vision_prefix} vs "
+                f"{engine.cfg.vision_prefix}, d_model {cfg.d_model} vs "
+                f"{engine.cfg.d_model}) — prefix embeds feed both models")
+        self.B = engine.max_batch
+        self.voff = cfg.vision_prefix or 0
+        # ring window: the full committed stream plus one chained draft
+        # overhang; min-window clamping (SWA) wraps exactly like target
+        # decode does
+        self.cache_len = serve_cache_len(
+            cfg, engine.max_prompt_len,
+            engine.max_new_tokens + engine.spec_k + 1)
+        self.state = T.init_decode_state(cfg, self.B, self.cache_len)
+        if self._step_fn is None:
+            self._step_fn = jax.jit(rsteps.make_serve_step(cfg))
+        self.dpos = np.zeros(self.B, np.int64)     # next unfed position
+        self.last_tok = np.zeros(self.B, np.int64)
+        self.last_pos = np.zeros(self.B, np.int64)
+
+    def _prefill(self, inputs):
+        key = tuple(sorted((k, v.shape) for k, v in inputs.items()))
+        fn = self._prefill_fns.get(key)
+        if fn is None:
+            fn = jax.jit(rsteps.make_prefill_step(self.cfg, self.cache_len))
+            self._prefill_fns[key] = fn
+        return fn
+
+    def admit(self, engine, i: int, slot) -> None:
+        from repro.runtime.engine import insert_slot
+        req = slot.req
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        inputs = {"tokens": prompt}
+        if self.cfg.vision_prefix:
+            pe = req.prefix_embeds
+            if pe is None:
+                pe = jnp.zeros((self.cfg.vision_prefix, self.cfg.d_model),
+                               self.cfg.dtype)
+            inputs["prefix_embeds"] = jnp.asarray(pe, self.cfg.dtype)[None]
+        _, rstate = self._prefill(inputs)(self.params, inputs)
+        self.state = insert_slot(self.state, rstate, i)
+        pos0 = len(req.prompt) + self.voff
+        self.dpos[i] = pos0
+        self.last_tok[i] = int(np.asarray(req.prompt).reshape(-1)[-1])
+        self.last_pos[i] = pos0 - 1
+
+    def evict(self, engine, i: int) -> None:
+        from repro.runtime.engine import reset_slot
+        self.state = reset_slot(self.state, i)
+        self.dpos[i] = 0
+        self.last_tok[i] = 0
+        self.last_pos[i] = 0
+
+    # -- proposal ----------------------------------------------------------
+
+    def propose(self, views, k):
+        if not views:
+            return {}
+        # per-slot feed schedules: real catch-up tokens first (rewound to
+        # the committed frontier — stale speculative ring entries are
+        # overwritten position by position before anything queries them),
+        # then k-1 chained self-feeds
+        feeds: Dict[int, List[tuple]] = {}
+        chain_left: Dict[int, int] = {}
+        for view in views:
+            i, ctx, pos_next = view.slot, view.context, view.pos_next
+            start = min(int(self.dpos[i]), pos_next)
+            feeds[i] = [(ctx[q - self.voff], q)
+                        for q in range(start, pos_next + 1)]
+            chain_left[i] = k - 1
+        out: Dict[int, List[int]] = {v.slot: [] for v in views}
+        n_steps = max(len(feeds[i]) + chain_left[i] for i in feeds)
+        collecting: Dict[int, bool] = {}
+        for t in range(n_steps):
+            tok = self.last_tok.copy()
+            pos = self.last_pos.copy()
+            for i, sched in feeds.items():
+                if t < len(sched):
+                    tok[i], pos[i] = sched[t]
+                    collecting[i] = (t == len(sched) - 1)
+                elif t < len(sched) + chain_left[i]:
+                    tok[i] = out[i][-1]           # chain on own argmax
+                    pos[i] = pos[i] + 1           # ... one position ahead
+                    collecting[i] = True
+                else:
+                    collecting[i] = False
+            res = self._step_fn(self.params, {
+                "state": self.state,
+                "tokens": jnp.asarray(tok, jnp.int32),
+                "pos": jnp.asarray(pos, jnp.int32),
+            })
+            self.state = res["state"]
+            nxt = np.asarray(res["next"])
+            self.last_tok, self.last_pos = tok, pos
+            for i in feeds:
+                if collecting.get(i):
+                    out[i].append(int(nxt[i]))
+        for view in views:
+            self.dpos[view.slot] = view.pos_next + k
+        return out
+
+
+# ---------------------------------------------------------------------------
+# registry + validation (the launcher's up-front refusal path)
+# ---------------------------------------------------------------------------
+
+PROPOSERS = {"ngram": NgramProposer, "draft": DraftModelProposer}
+
+
+def available_proposers() -> List[str]:
+    return sorted(PROPOSERS)
+
+
+def validate_speculate(speculate: Optional[str], spec_k: int, *,
+                       cfg: ModelConfig, paged: bool = True
+                       ) -> Optional[str]:
+    """Resolve/validate ``--speculate`` × ``--spec-k`` up front.
+
+    Mirrors the planner's (and ``--kv-format``'s) forced-pair refusal: a
+    bad combination fails here with the registry's vocabulary instead of
+    deep inside the serving loop. Returns the proposer name (the part
+    before ``:``), or None when speculation is off.
+    """
+    if speculate in (None, "", "off"):
+        return None
+    name = str(speculate).split(":", 1)[0]
+    if name not in PROPOSERS:
+        raise ValueError(
+            f"--speculate {speculate!r}: unknown proposer {name!r}. "
+            f"Registered proposers: {available_proposers()} "
+            f"(use 'draft:<spec>' to derive a draft model)")
+    if spec_k < 1:
+        raise ValueError(
+            f"--spec-k must be >= 1 (got {spec_k}); speculation scores "
+            f"the last emitted token plus spec_k drafts per step")
+    if not paged:
+        raise ValueError(
+            f"--speculate {name!r} requires the paged KV cache (rollback "
+            f"is allocator-level); drop --ring")
+    if cfg.family not in T.CHUNKABLE_FAMILIES:
+        raise ValueError(
+            f"--speculate {name!r} needs an attention-state family "
+            f"{T.CHUNKABLE_FAMILIES}, not {cfg.family!r} — the batched "
+            f"verify step rides the chunked-prefill path")
+    if cfg.sliding_window and spec_k >= cfg.sliding_window:
+        raise ValueError(
+            f"--spec-k {spec_k} must be smaller than the sliding window "
+            f"({cfg.sliding_window}): a draft overhang spanning the whole "
+            f"window would evict entries its own verify still attends")
+    return name
+
+
+def make_proposer(speculate: str, *, target_cfg: ModelConfig,
+                  draft_cfg: Optional[ModelConfig] = None,
+                  draft_params=None, seed: int = 1) -> Proposer:
+    """Build a proposer from a ``--speculate`` spec string.
+
+    ``ngram`` / ``ngram:<max_n>`` — prompt lookup; ``draft`` /
+    ``draft:layers=<N>`` — a draft model derived from the target config
+    with ``N`` layers (default 1), or exactly ``draft_cfg``/``draft_params``
+    when the caller supplies them.
+    """
+    name, _, arg = str(speculate).partition(":")
+    if name == "ngram":
+        return NgramProposer(int(arg)) if arg else NgramProposer()
+    if name == "draft":
+        cfg = draft_cfg
+        if cfg is None:
+            n_layers = 1
+            if arg:
+                key, _, val = arg.partition("=")
+                if key != "layers" or not val.isdigit():
+                    raise ValueError(
+                        f"--speculate draft:{arg!r}: expected "
+                        f"'draft:layers=<N>' (or pass a draft config "
+                        f"programmatically)")
+                n_layers = int(val)
+            cfg = dataclasses.replace(target_cfg, num_layers=n_layers,
+                                      w4a16_plan=None)
+        return DraftModelProposer(cfg, draft_params, seed=seed)
+    raise ValueError(f"unknown proposer {name!r}; registered: "
+                     f"{available_proposers()}")

@@ -150,6 +150,25 @@ def make_prefill_chunk_step(cfg: ModelConfig, cache_len: int, *,
     return chunk_step
 
 
+def make_verify_step(cfg: ModelConfig, cache_len: int, *,
+                     kv_format: str = "kv_fp16"):
+    """verify(params, state, inputs={tokens, positions, tables}) — one
+    batched speculative-verify step (see T.verify_step): scores the last
+    emitted token plus up to C-1 draft tokens for every slot in one
+    forward pass and returns the per-position greedy choice. ``next`` is
+    the device-side argmax over *all* (slot, position) cells, so the host
+    syncs one (B, C) int array per step regardless of batch or draft
+    length. ``state`` is its own (donatable) argument, as in the chunked
+    prefill step."""
+    def verify(params, state, inputs):
+        logits, state = T.verify_step(
+            params, cfg, state, inputs["tokens"], inputs["positions"],
+            inputs["tables"], cache_len=cache_len, kv_format=kv_format)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return {"next": next_tok, "logits": logits, "state": state}
+    return verify
+
+
 # ---------------------------------------------------------------------------
 # sharding builders for the input bundles
 # ---------------------------------------------------------------------------
@@ -267,5 +286,34 @@ def jit_prefill_chunk_step(cfg, mesh, cache_len, params_abstract,
         },
         # donate the state: the block pool is the largest serving tensor
         # and would otherwise be copied whole on every prefill chunk
+        donate_argnums=(1,),
+    )
+
+
+def jit_verify_step(cfg, mesh, cache_len, params_abstract,
+                    inputs_abstract, *, kv_format: str = "kv_fp16",
+                    fsdp_serve=False):
+    """Sharded speculative-verify step: state in/out on the decode-state
+    shardings (donated, like the chunk step); tokens/positions/tables are
+    batch-sharded over data, and the (B, C) next/logits outputs come back
+    batch-sharded too."""
+    fn = make_verify_step(cfg, cache_len, kv_format=kv_format)
+    pshard = shd.param_shardings(params_abstract, mesh, fsdp=fsdp_serve)
+    sshard = shd.decode_state_shardings(inputs_abstract["state"], cfg, mesh)
+    ishard = {
+        "tokens": shd.data_shardings(inputs_abstract["tokens"], mesh),
+        "positions": shd.data_shardings(inputs_abstract["positions"], mesh),
+        "tables": shd.data_shardings(inputs_abstract["tables"], mesh),
+    }
+    B = inputs_abstract["tokens"].shape[0]
+    baxis = shd.batch_axis_entry(B, mesh)
+    return jax.jit(
+        fn,
+        in_shardings=(pshard, sshard, ishard),
+        out_shardings={
+            "next": NamedSharding(mesh, P(baxis, None)),
+            "logits": NamedSharding(mesh, P(baxis, None, None)),
+            "state": sshard,
+        },
         donate_argnums=(1,),
     )
