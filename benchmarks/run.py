@@ -441,6 +441,95 @@ def bench_speculative(out_path: str = "BENCH_speculative.json") -> dict:
     return blob
 
 
+# ---------------------------------------------------------------------------
+# Front-door sweep: the async HTTP serving path under rising arrival rates —
+# real-socket SSE clients against the bounded admission queue; served ratio,
+# TTFT/e2e quantiles and 429/408 shed counts land in BENCH_frontdoor.json
+# ---------------------------------------------------------------------------
+
+def bench_frontdoor(out_path: str = "BENCH_frontdoor.json") -> dict:
+    """Arrival-rate sweep over the asyncio front door (reduced danube):
+    R real HTTP clients spaced ``gap_ms`` apart stream SSE tokens through
+    a small admission queue; faster arrivals shed load as 429 instead of
+    queueing past the SLO. A plain ``engine.run`` pass warms compile
+    caches first, so the sweep measures serving, not tracing."""
+    import asyncio
+    import dataclasses
+
+    from repro import configs
+    from repro.models import transformer as T
+    from repro.runtime.engine import Request, ServingEngine
+    from repro.runtime.frontdoor import (FrontDoor, QueueSettings,
+                                         sse_decode_tokens)
+
+    print("# frontdoor: name,us_per_call,derived(served/total)")
+    arch, P, G, B, R, QD = "h2o-danube-1.8b", 8, 8, 2, 6, 3
+    cfg = dataclasses.replace(configs.get_reduced(arch),
+                              w4a16_strategy="xla",
+                              quant_format=BENCH_FORMAT)
+    key = jax.random.PRNGKey(0)
+    params = T.quantize_params(T.init_params(key, cfg), cfg, min_size=0)
+    tokens = jax.random.randint(key, (R, P), 0, cfg.vocab_size)
+    prompts = [[int(t) for t in tokens[i]] for i in range(R)]
+
+    engine = ServingEngine(cfg, params, max_batch=B, max_prompt_len=P,
+                           max_new_tokens=G, page_size=4, prefill_chunk=4,
+                           admission="priority")
+    engine.run([Request(rid=i, prompt=prompts[i], max_new_tokens=G)
+                for i in range(B)])                # warm: compile + plans
+
+    async def client(port, prompt, delay):
+        await asyncio.sleep(delay)
+        reader, writer = await asyncio.open_connection("127.0.0.1", port)
+        body = json.dumps({"prompt": prompt, "max_new_tokens": G}).encode()
+        writer.write((f"POST /v1/generate HTTP/1.1\r\nHost: bench\r\n"
+                      f"Content-Length: {len(body)}\r\n\r\n").encode()
+                     + body)
+        await writer.drain()
+        payload = await reader.read()
+        writer.close()
+        if b" 200 " not in payload.split(b"\r\n", 1)[0]:
+            return None
+        return sse_decode_tokens(payload)
+
+    async def sweep(gap_s):
+        fd = FrontDoor(engine,
+                       settings=QueueSettings(queue_depth=QD))
+        await fd.serve()
+        t0 = time.perf_counter()
+        outs = await asyncio.gather(*(
+            client(fd.port, prompts[i], i * gap_s) for i in range(R)))
+        report = await fd.shutdown()
+        return outs, report, time.perf_counter() - t0
+
+    cells = []
+    for gap_ms in (0, 30, 120):
+        outs, report, wall = asyncio.run(sweep(gap_ms / 1e3))
+        served = sum(1 for o in outs if o is not None)
+        ls, ts = report.latency_stats(), report.ttft_stats()
+        name = f"frontdoor/{arch}/gap{gap_ms}ms"
+        print(f"{name},{wall*1e6:.0f},{served}/{R}")
+        cells.append({
+            "name": name, "arch": arch, "gap_ms": gap_ms,
+            "queue_depth": QD, "batch": B, "requests": R,
+            "served": served, "rejected_429": report.rejected_429,
+            "rejected_408": report.rejected_408,
+            "peak_queue_depth": report.peak_queue_depth,
+            "ttft_p50_ms": round(ts["p50"] * 1e3, 3),
+            "ttft_p99_ms": round(ts["p99"] * 1e3, 3),
+            "e2e_p50_ms": round(ls["p50"] * 1e3, 3),
+            "e2e_p99_ms": round(ls["p99"] * 1e3, 3),
+            "tok_per_s": round(report.tokens_per_s, 3),
+            "wall_s": round(wall, 3),
+        })
+    blob = {"format": BENCH_FORMAT, "backend": jax.default_backend(),
+            "cells": cells}
+    with open(out_path, "w") as f:
+        json.dump(blob, f, indent=1, sort_keys=True)
+    print(f"# frontdoor: wrote {len(cells)} cells -> {out_path}")
+    return blob
+
+
 BENCHES = {
     "fig2": bench_fig2_splitk_vs_dataparallel,
     "fig3": bench_fig3_w4a16_vs_fp16,
@@ -451,6 +540,7 @@ BENCHES = {
     "serving": bench_serving,
     "paged_kv": bench_paged_kv,
     "speculative": bench_speculative,
+    "frontdoor": bench_frontdoor,
 }
 
 
@@ -461,10 +551,11 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true",
                     help="run the quick perf snapshot, the fused-format "
                          "sweep, the serving sweep, the ring-vs-paged KV "
-                         "sweep and the speculative sweep, writing "
-                         "BENCH_quickstart.json, BENCH_formats.json, "
-                         "BENCH_serving.json, BENCH_paged_kv.json and "
-                         "BENCH_speculative.json (the CI artifacts)")
+                         "sweep, the speculative sweep and the front-door "
+                         "arrival sweep, writing BENCH_quickstart.json, "
+                         "BENCH_formats.json, BENCH_serving.json, "
+                         "BENCH_paged_kv.json, BENCH_speculative.json and "
+                         "BENCH_frontdoor.json (the CI artifacts)")
     ap.add_argument("--format", default=quant.DEFAULT_FORMAT,
                     help="QuantFormat name for quantized benches "
                          "(w4a16_g128 | w8a16_channel | w4a8_g128 | ...)")
@@ -480,6 +571,7 @@ def main(argv=None) -> None:
         bench_serving()
         bench_paged_kv()
         bench_speculative()
+        bench_frontdoor()
         return
     for name in args.benches or list(BENCHES):
         if name not in BENCHES:

@@ -57,6 +57,11 @@ class ServeSettings:
     ``speculate`` names a draft proposer (``runtime/speculative.py``
     registry: ``ngram`` | ``draft[:layers=N]``; None = off) and
     ``spec_k`` how many draft tokens each verify step scores.
+
+    ``queue_depth`` bounds the front door's admission queue (requests past
+    it get 429 — `runtime/frontdoor.py`) and ``deadline_s`` is the default
+    per-request SLO applied when a client sends none (None = no deadline;
+    an expired deadline is dropped with 408 before prefill).
     """
 
     page_size: int = 16
@@ -64,6 +69,8 @@ class ServeSettings:
     kv_format: str = "kv_fp16"
     speculate: Optional[str] = None
     spec_k: int = 4
+    queue_depth: int = 64
+    deadline_s: Optional[float] = None
 
 
 SERVE_PRESETS = {
@@ -77,8 +84,11 @@ SERVE_PRESETS = {
     "rwkv6-7b": ServeSettings(prefill_chunk=None),
     "whisper-small": ServeSettings(prefill_chunk=None),
     "hymba-1.5b": ServeSettings(prefill_chunk=None),
-    # 405B-class: big pages keep the block tables short at 32k contexts
-    "llama3-405b": ServeSettings(page_size=64, prefill_chunk=256),
+    # 405B-class: big pages keep the block tables short at 32k contexts;
+    # steps are expensive, so the admission queue is kept short — shed
+    # load with a fast 429 instead of queueing past any realistic SLO
+    "llama3-405b": ServeSettings(page_size=64, prefill_chunk=256,
+                                 queue_depth=16),
 }
 
 

@@ -20,11 +20,19 @@ block granularity, ``--prefill-chunk`` interleaves long-prompt prefill
 with decode, and ``--kv-format`` picks the KV block storage (``kv_fp16``
 | ``kv8_channel`` per-head INT8) — validated against the registry up
 front. See docs/serving.md.
+
+``--http PORT`` swaps the in-process arrival loop for the asyncio front
+door (``runtime/frontdoor.py``): real-socket clients POST /v1/generate
+and stream tokens back as SSE, through a bounded admission queue
+(``--queue-depth`` → 429 when full, ``--deadline-s`` → 408 once expired)
+with ``GET /metrics`` live. See docs/serving.md §Front door.
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import dataclasses
+import json
 import os
 import time
 
@@ -66,6 +74,71 @@ def validate_kv_format(kv_format: str, weight_format: str, *,
     return kf.name
 
 
+def parse_prompt_len(spec) -> "tuple[int, int]":
+    """``N`` (fixed) or ``MIN:MAX`` (uniform variable length) → bounds."""
+    s = str(spec)
+    try:
+        lo, hi = (int(x) for x in s.split(":", 1)) if ":" in s \
+            else (int(s),) * 2
+    except ValueError:
+        raise ValueError(
+            f"--prompt-len must be N or MIN:MAX, got {spec!r}") from None
+    if not 0 < lo <= hi:
+        raise ValueError(
+            f"--prompt-len needs 0 < MIN <= MAX, got {spec!r}")
+    return lo, hi
+
+
+def _serve_http(engine, reqs, *, port, queue_depth, deadline_s,
+                arrival_every):
+    """Run the arrival simulation through the real front door: one
+    real-socket HTTP client per request, tokens streamed back as SSE.
+    The in-process simulation's step-count spacing maps to wall clock at
+    10 ms per ``--arrival-every`` unit. Rejected requests (429/408)
+    come back as ``None`` generations."""
+    from repro.runtime.frontdoor import (FrontDoor, QueueSettings,
+                                         sse_decode_tokens)
+
+    async def client(port, req, delay):
+        await asyncio.sleep(delay)
+        reader, writer = await asyncio.open_connection("127.0.0.1", port)
+        spec = {"prompt": [int(t) for t in req.prompt],
+                "max_new_tokens": req.max_new_tokens,
+                "priority": req.priority}
+        if req.prefix_embeds is not None:
+            spec["prefix_embeds"] = [[float(x) for x in row]
+                                     for row in req.prefix_embeds]
+        if req.audio_embeds is not None:
+            spec["audio_embeds"] = [[float(x) for x in row]
+                                    for row in req.audio_embeds]
+        body = json.dumps(spec).encode()
+        writer.write((f"POST /v1/generate HTTP/1.1\r\nHost: serve\r\n"
+                      f"Content-Length: {len(body)}\r\n\r\n").encode()
+                     + body)
+        await writer.drain()
+        payload = await reader.read()
+        writer.close()
+        if b" 200 " not in payload.split(b"\r\n", 1)[0]:
+            return None
+        return sse_decode_tokens(payload)
+
+    async def run():
+        fd = FrontDoor(engine, settings=QueueSettings(
+            queue_depth=queue_depth, default_deadline_s=deadline_s))
+        await fd.serve(port=port)
+        print(f"[serve] front door: http://{fd.host}:{fd.port} "
+              f"(queue_depth {queue_depth}, deadline "
+              f"{'none' if deadline_s is None else f'{deadline_s:g} s'})")
+        t0 = time.time()
+        got = await asyncio.gather(*(
+            client(fd.port, r, i * arrival_every * 0.01)
+            for i, r in enumerate(reqs)))
+        report = await fd.shutdown()
+        return got, report, time.time() - t0
+
+    return asyncio.run(run())
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list(configs.ARCHS))
@@ -74,7 +147,9 @@ def main(argv=None):
                     help="engine slot count (max concurrent requests)")
     ap.add_argument("--max-batch", type=int, default=None,
                     help="alias for --batch (slot-pool size)")
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--prompt-len", default="32",
+                    help="prompt tokens per request: fixed N, or MIN:MAX "
+                         "for uniformly-distributed variable lengths")
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--requests", type=int, default=None,
                     help="total simulated requests (default: the slot "
@@ -122,6 +197,18 @@ def main(argv=None):
                          "saved (with any new decisions) afterwards")
     ap.add_argument("--refine-plans", action="store_true",
                     help="run the planner's tile-search refinement pass")
+    ap.add_argument("--http", type=int, default=None, metavar="PORT",
+                    help="serve through the async HTTP front door on PORT "
+                         "(0 = ephemeral): real-socket POST /v1/generate "
+                         "clients streaming SSE tokens, with GET /metrics "
+                         "live; arrivals spaced --arrival-every x 10 ms")
+    ap.add_argument("--queue-depth", type=int, default=None,
+                    help="front-door admission queue bound before 429 "
+                         "(--http only; default: the arch preset)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="default per-request SLO deadline in seconds, "
+                         "408 once expired (--http only; 0 = none; "
+                         "default: the arch preset)")
     ap.add_argument("--no-quant", action="store_true")
     ap.add_argument("--verbose", action="store_true",
                     help="per-step engine log lines")
@@ -173,7 +260,8 @@ def main(argv=None):
               f"({mesh.devices.size} devices)")
 
     B = args.max_batch or args.batch
-    P, G = args.prompt_len, args.gen
+    pmin, pmax = parse_prompt_len(args.prompt_len)
+    P, G = pmax, args.gen      # slots are sized for the longest prompt
     R = args.requests or B
     proposer = None
     if speculate is not None:
@@ -202,6 +290,9 @@ def main(argv=None):
     # request-arrival simulation: R requests over the same random prompt
     # distribution, one every --arrival-every decode steps
     tokens = jax.random.randint(key, (R, P), 0, cfg.vocab_size)
+    plens = [P] * R if pmin == pmax else [
+        int(x) for x in jax.random.randint(
+            jax.random.fold_in(key, 7), (R,), pmin, pmax + 1)]
     reqs = []
     for i in range(R):
         extras = {}
@@ -213,22 +304,42 @@ def main(argv=None):
             extras["audio_embeds"] = jax.random.normal(
                 jax.random.fold_in(key, i),
                 (cfg.encoder_seq, cfg.d_model), cfg.dtype)
-        reqs.append(Request(rid=i, prompt=tokens[i], max_new_tokens=G,
+        reqs.append(Request(rid=i, prompt=tokens[i][:plens[i]],
+                            max_new_tokens=G,
                             arrival_step=i * args.arrival_every, **extras))
+    if pmin != pmax:
+        print(f"[serve] prompts: variable length {pmin}:{pmax} "
+              f"(mean {sum(plens) / R:.1f})")
 
-    t0 = time.time()
-    report = engine.run(reqs, verbose=args.verbose)
-    wall = time.time() - t0
+    if args.http is not None:
+        got, report, wall = _serve_http(
+            engine, reqs, port=args.http,
+            queue_depth=args.queue_depth or sset.queue_depth,
+            deadline_s=sset.deadline_s if args.deadline_s is None
+            else (args.deadline_s or None),
+            arrival_every=args.arrival_every)
+    else:
+        t0 = time.time()
+        report = engine.run(reqs, verbose=args.verbose)
+        wall = time.time() - t0
+        got = [report.results[r.rid] for r in reqs]
 
-    lat = sorted(report.latencies.values())
-    p50 = lat[len(lat) // 2] if lat else 0.0
+    ls = report.latency_stats()
     print(f"[serve] {R} requests in {report.steps} steps / {wall:.2f} s "
           f"wall; prefill {report.prefill_s*1e3:.1f} ms total")
     print(f"[serve] decode: {report.decode_tokens} tokens in "
           f"{report.decode_s:.3f} s = {report.tokens_per_s:.1f} tok/s "
           f"({report.decode_s / max(len(report.step_records), 1) * 1e3:.2f} "
-          f"ms/step); latency p50 {p50*1e3:.1f} ms "
-          f"max {lat[-1]*1e3 if lat else 0:.1f} ms")
+          f"ms/step); latency p50 {ls['p50']*1e3:.1f} / "
+          f"p95 {ls['p95']*1e3:.1f} / p99 {ls['p99']*1e3:.1f} ms "
+          f"max {ls['max']*1e3:.1f} ms")
+    if args.http is not None:
+        done = sum(1 for g in got if g is not None)
+        ts = report.ttft_stats()
+        print(f"[serve] front door: {done}/{R} served, "
+              f"{report.rejected_429} x 429, {report.rejected_408} x 408; "
+              f"peak queue {report.peak_queue_depth}; "
+              f"ttft p50 {ts['p50']*1e3:.1f} ms p99 {ts['p99']*1e3:.1f} ms")
     if engine.paged:
         worst = engine.pages_slot * min(B, R)
         print(f"[serve] pages: peak {report.peak_pages} in use "
@@ -238,13 +349,13 @@ def main(argv=None):
               f"{report.proposed_tokens} drafts accepted "
               f"({report.acceptance_rate:.0%}); tok/s above counts "
               f"accepted tokens only")
-    print(f"[serve] sample generation (request 0): {report.results[0]}")
+    print(f"[serve] sample generation (request 0): {got[0]}")
     if args.plan_cache:
         n = planning.save_plan_cache(args.plan_cache)
         c = planning.PLAN_CACHE
         print(f"[serve] plan cache: {n} plans -> {args.plan_cache} "
               f"({c.hits} hits / {c.misses} misses this run)")
-    return jnp.asarray([report.results[r.rid] for r in reqs], jnp.int32)
+    return jnp.asarray([g for g in got if g is not None], jnp.int32)
 
 
 if __name__ == "__main__":

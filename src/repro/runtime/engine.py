@@ -43,6 +43,7 @@ from __future__ import annotations
 import collections
 import contextlib
 import dataclasses
+import math
 import time
 from typing import Any, Dict, List, Optional
 
@@ -60,11 +61,12 @@ from repro.models import attention, layers
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.runtime import kvcache as kvc
+from repro.runtime import metrics as rmetrics
 from repro.runtime import sharding as shd
 from repro.runtime import speculative as spec
 from repro.runtime import steps as rsteps
 
-__all__ = ["Request", "ServeReport", "ServingEngine",
+__all__ = ["Request", "ServeReport", "ServingEngine", "StepEvents",
            "insert_slot", "reset_slot"]
 
 
@@ -78,6 +80,13 @@ class Request:
     that decode step. Prefix/audio embeddings are per-request frontends
     ((vision_prefix, d) / (encoder_seq, d)); when the arch needs them and
     the request doesn't carry them, the engine substitutes zeros.
+
+    ``deadline_s`` (client SLO, seconds from submission) and ``priority``
+    (higher admits first) only shape *admission ordering*, and only under
+    ``admission="priority"`` (the front door's mode) — the default FIFO
+    scheduler, and therefore every existing :meth:`ServingEngine.run`
+    caller, ignores both. Deadline *enforcement* (408 drops) lives in the
+    front door's queue, before the engine ever sees the request.
     """
 
     rid: int
@@ -86,11 +95,13 @@ class Request:
     arrival_step: int = 0
     prefix_embeds: Any = None
     audio_embeds: Any = None
+    deadline_s: Optional[float] = None
+    priority: int = 0
 
 
 @dataclasses.dataclass
 class ServeReport:
-    """What a :meth:`ServingEngine.run` produced."""
+    """What a :meth:`ServingEngine.run` (or a front-door session) produced."""
 
     results: Dict[int, List[int]]          # rid → generated token ids
     latencies: Dict[int, float]            # rid → admit→finish seconds
@@ -104,6 +115,18 @@ class ServeReport:
     peak_pages: int = 0                    # paged: max live blocks seen
     proposed_tokens: int = 0               # speculative: drafts scored
     accepted_tokens: int = 0               # speculative: drafts accepted
+    ttft: Dict[int, float] = dataclasses.field(default_factory=dict)
+    # rid → admit→first-token seconds
+    cancelled: Dict[int, List[int]] = dataclasses.field(default_factory=dict)
+    # rid → tokens emitted before cancellation (waiting-queue cancels: [])
+    admitted: int = 0                      # requests that reached a slot
+    # front-door admission outcomes (the engine never counts these itself;
+    # a 429/408 by definition never touched the engine)
+    rejected_429: int = 0                  # queue-full rejections
+    rejected_408: int = 0                  # expired-deadline drops
+    peak_queue_depth: int = 0              # front-door queue high-water mark
+    queue_wait: Dict[int, float] = dataclasses.field(default_factory=dict)
+    # rid → seconds in the front-door queue before engine submission
 
     @property
     def tokens_per_s(self) -> float:
@@ -115,6 +138,33 @@ class ServeReport:
     def acceptance_rate(self) -> float:
         return (self.accepted_tokens / self.proposed_tokens
                 if self.proposed_tokens else 0.0)
+
+    def latency_stats(self) -> Dict[str, float]:
+        """Nearest-rank p50/p95/p99 (+ mean/max) over per-request
+        admit→finish latency — the one percentile code path shared by the
+        serve CLI, the front door and ``GET /metrics``."""
+        return rmetrics.summarize(list(self.latencies.values()))
+
+    def ttft_stats(self) -> Dict[str, float]:
+        """Same summary over per-request time-to-first-token."""
+        return rmetrics.summarize(list(self.ttft.values()))
+
+
+@dataclasses.dataclass
+class StepEvents:
+    """What one :meth:`ServingEngine.step` did — the streaming contract.
+
+    The front door turns ``emitted`` into SSE chunks (tokens flush to the
+    client per engine step, not per run) and ``finished`` into stream
+    terminations. ``worked`` is False when the engine had nothing resident
+    (the step was a no-op and the step counter did not advance).
+    """
+
+    step: int
+    emitted: Dict[int, List[int]] = dataclasses.field(default_factory=dict)
+    finished: List[int] = dataclasses.field(default_factory=list)
+    admitted: List[int] = dataclasses.field(default_factory=list)
+    worked: bool = True
 
 
 class _Slot:
@@ -194,8 +244,13 @@ class ServingEngine:
                  page_size: int = 16, prefill_chunk: Optional[int] = None,
                  kv_format: Optional[str] = None,
                  num_pages: Optional[int] = None,
-                 speculate=None, spec_k: int = 4):
+                 speculate=None, spec_k: int = 4,
+                 admission: str = "fifo"):
         self.mesh = mesh
+        if admission not in ("fifo", "priority"):
+            raise ValueError(f"admission must be 'fifo' or 'priority', "
+                             f"got {admission!r}")
+        self.admission = admission
         self.max_batch = int(max_batch)
         self.max_prompt_len = int(max_prompt_len)
         self.max_new_tokens = int(max_new_tokens)
@@ -294,6 +349,19 @@ class ServingEngine:
         self._reserve: Dict[int, int] = {}      # slot → outstanding worst-
                                                 # case future allocations
         self.last_state = None       # decode-state snapshot (tests/debug)
+
+        # re-entrant stepper state (armed by start(); run() is a wrapper)
+        self.metrics: Optional[rmetrics.MetricsRegistry] = None
+        self.report: Optional[ServeReport] = None
+        self._started = False
+        self._waiting: collections.deque = collections.deque()
+        self._slots: List[Optional[_Slot]] = []
+        self._events: Optional[StepEvents] = None
+        self._state = None
+        self._state_dirty = False
+        self._serve = None
+        self._tok = self._pos = None
+        self._step_no = 0
 
     # -- compiled steps ----------------------------------------------------
 
@@ -666,11 +734,26 @@ class ServingEngine:
         if len(pending) == 1:
             slot, row = pending[0]
             slot.emit_first(int(jnp.argmax(row)))
+            self._note_first(slot)
             return
         firsts = np.asarray(
             jnp.argmax(jnp.stack([row for _, row in pending]), axis=-1))
         for (slot, _), t in zip(pending, firsts):
             slot.emit_first(int(t))
+            self._note_first(slot)
+
+    def _note_first(self, slot: _Slot) -> None:
+        """Record TTFT and queue the first token on the step's events."""
+        rid = slot.req.rid
+        ttft = time.perf_counter() - slot.t_admit
+        if self.report is not None:
+            self.report.ttft[rid] = ttft
+        if self._events is not None:
+            self._events.emitted.setdefault(rid, []).append(slot.tokens[-1])
+        if self.metrics is not None:
+            self.metrics.histogram(
+                "engine_ttft_seconds",
+                "admit to first token, per request").observe(ttft)
 
     def _admit_paged(self, state, req: Request, i: int, t0: float,
                      pending):
@@ -764,281 +847,465 @@ class ServingEngine:
         exactly that many cache entries)."""
         return int(len(req.prompt)) + (self.cfg.vision_prefix or 0)
 
-    def run(self, requests, *, verbose: bool = False) -> ServeReport:
-        """Serve ``requests`` to completion; returns a :class:`ServeReport`.
+    def _validate(self, r: Request) -> None:
+        if len(r.prompt) > self.max_prompt_len:
+            raise ValueError(
+                f"request {r.rid}: prompt length {len(r.prompt)} exceeds "
+                f"engine max_prompt_len {self.max_prompt_len}")
+        if r.max_new_tokens > self.max_new_tokens:
+            raise ValueError(
+                f"request {r.rid}: max_new_tokens {r.max_new_tokens} "
+                f"exceeds engine budget {self.max_new_tokens}")
+        if r.max_new_tokens < 1:
+            raise ValueError(f"request {r.rid}: max_new_tokens must be "
+                             f"at least 1 (prefill emits the first token)")
 
-        The scheduler admits arrived requests into free slots each step,
-        advances at most one prefill chunk per admitting slot, runs one
-        batched decode step over the active slots, and evicts finished
-        slots — continuous batching, not static batching: neither a long
-        request nor (with chunked prefill) a long *prompt* blocks short
-        requests from cycling through.
-        """
-        for r in requests:
-            if len(r.prompt) > self.max_prompt_len:
-                raise ValueError(
-                    f"request {r.rid}: prompt length {len(r.prompt)} exceeds "
-                    f"engine max_prompt_len {self.max_prompt_len}")
-            if r.max_new_tokens > self.max_new_tokens:
-                raise ValueError(
-                    f"request {r.rid}: max_new_tokens {r.max_new_tokens} "
-                    f"exceeds engine budget {self.max_new_tokens}")
-            if r.max_new_tokens < 1:
-                raise ValueError(f"request {r.rid}: max_new_tokens must be "
-                                 f"at least 1 (prefill emits the first token)")
+    # -- re-entrant stepper API (the front door drives these directly) ----
 
-        waiting = collections.deque(
-            sorted(requests, key=lambda r: (r.arrival_step, r.rid)))
-        slots: List[Optional[_Slot]] = [None] * self.max_batch
-        report = ServeReport(results={}, latencies={})
+    def start(self) -> None:
+        """Arm the stepper: fresh scheduler state, empty report, initial
+        decode state. Compiled steps and kernel plans are engine-lifetime
+        (cached on ``self``), so a second ``start()`` reuses them — only
+        per-run state resets. :meth:`run` is a wrapper over
+        start/submit/step; the front door calls these directly so it can
+        interleave submissions, cancellations and token streaming between
+        decode steps."""
+        self._waiting = collections.deque()
+        self._slots = [None] * self.max_batch
+        self.report = ServeReport(results={}, latencies={})
         if self.paged:
             self._tables = np.full((self.max_batch, self.pages_slot),
                                    -1, np.int32)
             self._reserve.clear()
-        proposer = self.proposer
-        if proposer is not None:
-            proposer.reset(self)
-
-        def finish(state, i, slot):
-            report.results[slot.req.rid] = slot.tokens
-            report.latencies[slot.req.rid] = \
-                time.perf_counter() - slot.t_admit
-            if self.paged:
-                state, d = self._evict_paged(state, i)
-            else:
-                state, d = reset_slot(state, i), True
-            if proposer is not None:
-                proposer.evict(self, i)
-            slots[i] = None
-            return state, d
-
+        if self.proposer is not None:
+            self.proposer.reset(self)
         with self._ctx():
-            state = self._init_state()
-            state_dirty = True      # needs re-placing onto the serve
-                                    # shardings (set after insert/reset)
-            tok = np.zeros(self.max_batch, np.int32)
-            pos = np.zeros(self.max_batch, np.int32)
-            serve = self._verify_step() if proposer is not None \
+            self._state = self._init_state()
+            self._serve = self._verify_step() if self.proposer is not None \
                 else self._serve_step()
-            step = 0
-            while waiting or any(s is not None for s in slots):
-                pending: List[Any] = []     # (slot, logits) rows awaiting
-                                            # their batched first argmax
-                # -- admit arrived requests into free slots ----------------
-                admitted = 0
-                for i in range(self.max_batch):
-                    if not (waiting and waiting[0].arrival_step <= step):
-                        break
-                    if slots[i] is not None:
-                        continue
-                    if self.paged and (
-                            self._required_pages(waiting[0])
-                            + sum(self._reserve.values())
-                            > self.alloc.pages_free):
-                        break               # pool too full — wait for evicts
-                    req = waiting.popleft()
-                    t0 = time.perf_counter()
-                    if self.paged:
-                        state, slot, d = self._admit_paged(
-                            state, req, i, t0, pending)
-                        state_dirty |= d
-                    else:
-                        inputs = self._prefill_inputs(req)
-                        logits, rstate = self._prefill_fn(inputs)(
-                            self.params, inputs)
-                        state = insert_slot(state, rstate, i)
-                        state_dirty = True
-                        slot = _Slot(req, self.pos0(req), t0)
-                        pending.append((slot, logits[0]))
-                    if proposer is not None:
-                        slot.prompt_ids = [
-                            int(t) for t in
-                            np.asarray(req.prompt).reshape(-1)]
-                        proposer.admit(self, i, slot)
-                    report.prefill_s += time.perf_counter() - t0
-                    slots[i] = slot
-                    admitted += 1
+        self._state_dirty = True    # needs re-placing onto the serve
+                                    # shardings (set after insert/reset)
+        self._tok = np.zeros(self.max_batch, np.int32)
+        self._pos = np.zeros(self.max_batch, np.int32)
+        self._step_no = 0
+        self._events = None
+        self._started = True
 
-                # -- advance chunked prefills ------------------------------
-                # (pf_stream gates out whole-prompt slots still waiting on
-                # the batched first-token flush below)
-                for i, s in enumerate(slots):
-                    if s is not None and s.phase == "prefill" \
-                            and s.pf_stream is not None:
-                        t0 = time.perf_counter()
-                        if state_dirty:
-                            state = self._constrain_state(state)
-                            state_dirty = False
-                        state, d = self._advance_prefill(state, i, s,
-                                                         pending)
-                        state_dirty |= d
-                        report.prefill_s += time.perf_counter() - t0
-                self._flush_first_tokens(pending)
+    def submit(self, req: Request) -> None:
+        """Queue ``req`` for admission (validated now, admitted by a later
+        :meth:`step` when a slot and — paged — enough pages are free)."""
+        if not self._started:
+            raise RuntimeError("ServingEngine.submit() before start()")
+        self._validate(req)
+        self._waiting.append(req)
 
-                # -- settle freshly-activated slots ------------------------
-                for i, s in enumerate(slots):
-                    if s is not None and s.phase == "active" and \
-                            len(s.tokens) == 1 and s.remaining >= 0:
-                        if s.remaining == 0:
-                            state, d = finish(state, i, s)
-                            state_dirty |= d
-                        else:
-                            tok[i], pos[i] = s.tokens[0], s.pos_next
-
-                active = [i for i, s in enumerate(slots)
-                          if s is not None and s.phase == "active"]
-                if not active:
-                    if waiting or any(s is not None for s in slots):
-                        step += 1
-                        continue
-                    break
-
-                # -- speculative: propose → verify → accept → rollback -----
-                if proposer is not None:
-                    k = self.spec_k
-                    views = [spec.ProposalView(
-                        i, slots[i].prompt_ids + slots[i].tokens,
-                        int(pos[i])) for i in active]
-                    t0 = time.perf_counter()
-                    proposals = proposer.propose(views, k)
-                    C = k + 1
-                    ptok = np.zeros((self.max_batch, C), np.int32)
-                    ppos = np.full((self.max_batch, C), -1, np.int32)
-                    n_drafts: Dict[int, int] = {}
-                    txns: Dict[int, list] = {}
-                    for i in active:
-                        s = slots[i]
-                        props = list(proposals.get(i, []))[:k]
-                        # clamp: (a) never emit past the request budget,
-                        # (b) never let the draft overhang wrap the logical
-                        # window — a wrapped speculative write would destroy
-                        # a still-in-window entry, where plain decode only
-                        # ever overwrites the exactly-expiring one
-                        n = min(len(props), s.remaining - 1)
-                        if int(pos[i]) + n >= self.cache_len:
-                            n = max(0, self.cache_len - 1 - int(pos[i]))
-                        n_drafts[i] = n
-                        report.proposed_tokens += n
-                        ptok[i, 0], ppos[i, 0] = tok[i], pos[i]
-                        for j in range(n):
-                            ptok[i, j + 1] = int(props[j])
-                            ppos[i, j + 1] = int(pos[i]) + j + 1
-                        txns[i] = []
-                        state, d = self._ensure_pages(
-                            state, i,
-                            [p % self.cache_len for p in
-                             range(int(pos[i]), int(pos[i]) + n + 1)],
-                            txn=txns[i])
-                        state_dirty |= d
-                    report.peak_pages = max(report.peak_pages,
-                                            self.alloc.pages_in_use)
-                    if state_dirty:
-                        state = self._constrain_state(state)
-                        state_dirty = False
-                    step_tables = self._tables.copy()
-                    for i, s in enumerate(slots):
-                        if s is None or s.phase != "active":
-                            step_tables[i] = -1
-                    res = serve(self.params, state, {
-                        "tokens": jnp.asarray(ptok),
-                        "positions": jnp.asarray(ppos),
-                        "tables": jnp.asarray(step_tables),
-                    })
-                    state = res["state"]
-                    nxt = np.asarray(res["next"])          # (B, C)
-                    dt = time.perf_counter() - t0
-                    report.decode_s += dt
-                    emitted_total = 0
-                    for i in active:
-                        s = slots[i]
-                        # exact greedy acceptance: draft j survives iff it
-                        # equals the target's own argmax at position j-1;
-                        # the first mismatch position contributes the
-                        # target's choice as the bonus token
-                        a = 0
-                        while a < n_drafts[i] and \
-                                int(ptok[i, a + 1]) == int(nxt[i, a]):
-                            a += 1
-                        emitted = [int(nxt[i, j]) for j in range(a + 1)]
-                        report.accepted_tokens += a
-                        state, d = self._rollback_pages(
-                            state, i, txns[i],
-                            ((int(pos[i]) + a) % self.cache_len)
-                            // self.page_size)
-                        state_dirty |= d
-                        emitted_total += len(emitted)
-                        s.tokens.extend(emitted)
-                        s.remaining -= len(emitted)
-                        s.pos_next += len(emitted)
-                        tok[i], pos[i] = emitted[-1], s.pos_next
-                        if s.remaining == 0:
-                            state, d = finish(state, i, s)
-                            state_dirty |= d
-                    report.decode_tokens += emitted_total
-                    report.step_records.append({
-                        "step": step, "active": len(active),
-                        "admitted": admitted, "decode_ms": dt * 1e3,
-                        "emitted": emitted_total})
-                    if verbose:
-                        print(f"[engine] step {step}: active={len(active)} "
-                              f"emitted={emitted_total} {dt*1e3:.2f} ms")
-                    step += 1
-                    continue
-
-                # -- one batched decode step over every slot ---------------
+    def cancel(self, rid: int) -> bool:
+        """Cancel request ``rid`` wherever it is: drop it from the waiting
+        queue, or — mid-decode / mid-chunked-prefill — evict its slot and
+        decref its pages (shared blocks stay with their peers; exclusive
+        blocks get their tags wiped and return to the pool). Tokens emitted
+        so far land in ``report.cancelled[rid]``; the request never shows
+        up in ``report.results``. Returns False if ``rid`` is not resident
+        (already finished, cancelled, or never submitted). Call between
+        steps — the front door applies client disconnects exactly there."""
+        if not self._started:
+            return False
+        for idx, r in enumerate(self._waiting):
+            if r.rid == rid:
+                del self._waiting[idx]
+                self._keys_cache.pop(id(r), None)
+                self.report.cancelled[rid] = []
+                self._count_cancel()
+                return True
+        for i, s in enumerate(self._slots):
+            if s is not None and s.req.rid == rid:
+                self.report.cancelled[rid] = list(s.tokens)
                 if self.paged:
-                    for i in active:
-                        state, d = self._ensure_pages(
-                            state, i, [int(pos[i]) % self.cache_len])
-                        state_dirty |= d
-                    report.peak_pages = max(report.peak_pages,
-                                            self.alloc.pages_in_use)
+                    self._state, d = self._evict_paged(self._state, i)
+                else:
+                    self._state, d = reset_slot(self._state, i), True
+                self._state_dirty |= d
+                if self.proposer is not None:
+                    self.proposer.evict(self, i)
+                self._slots[i] = None
+                self._count_cancel()
+                return True
+        return False
+
+    def _count_cancel(self) -> None:
+        if self.metrics is not None:
+            self.metrics.counter(
+                "engine_cancelled_total",
+                "requests cancelled while queued or resident").inc()
+
+    def has_work(self) -> bool:
+        """True while any request is waiting or resident in a slot."""
+        return self._started and (bool(self._waiting)
+                                  or any(s is not None
+                                         for s in self._slots))
+
+    def drain(self, *, verbose: bool = False) -> ServeReport:
+        """Step until nothing is waiting or resident; returns the report."""
+        while self.has_work():
+            self.step(verbose=verbose)
+        return self.report
+
+    def _next_admissible(self) -> Optional[int]:
+        """Waiting-queue index of the next request to admit, or None.
+
+        FIFO gates on the queue head (strict submission order — the
+        pre-stepper engine's behavior, byte-identical for ``run()``
+        callers); "priority" picks the best *arrived* request by
+        (priority desc, deadline asc, arrival, rid) — the front door's
+        SLO-aware admission order.
+        """
+        w = self._waiting
+        if not w:
+            return None
+        if self.admission == "fifo":
+            return 0 if w[0].arrival_step <= self._step_no else None
+        best = None
+        for idx, r in enumerate(w):
+            if r.arrival_step > self._step_no:
+                continue
+            key = (-(r.priority or 0),
+                   r.deadline_s if r.deadline_s is not None else math.inf,
+                   r.arrival_step, r.rid)
+            if best is None or key < best[0]:
+                best = (key, idx)
+        return None if best is None else best[1]
+
+    def _finish(self, state, i: int, slot: _Slot):
+        report = self.report
+        rid = slot.req.rid
+        report.results[rid] = slot.tokens
+        report.latencies[rid] = time.perf_counter() - slot.t_admit
+        if self.paged:
+            state, d = self._evict_paged(state, i)
+        else:
+            state, d = reset_slot(state, i), True
+        if self.proposer is not None:
+            self.proposer.evict(self, i)
+        self._slots[i] = None
+        if self._events is not None:
+            self._events.finished.append(rid)
+        if self.metrics is not None:
+            self.metrics.histogram(
+                "engine_e2e_seconds",
+                "admit to finish, per request").observe(
+                report.latencies[rid])
+        return state, d
+
+    def _sample_metrics(self, ev: StepEvents, decode_dt: float) -> None:
+        """Per-step metrics sample (queue depth, residency, pages, rates)."""
+        m = self.metrics
+        if m is None:
+            return
+        m.counter("engine_steps_total", "scheduler steps executed").inc()
+        n_tok = sum(len(v) for v in ev.emitted.values())
+        if n_tok:
+            m.counter("engine_tokens_total", "tokens emitted").inc(n_tok)
+        if decode_dt > 0.0:
+            m.histogram("engine_step_seconds",
+                        "decode/verify wall time per step").observe(decode_dt)
+            if n_tok:
+                m.histogram("engine_token_seconds",
+                            "decode wall time per emitted token").observe(
+                    decode_dt / n_tok)
+        m.gauge("engine_queue_depth",
+                "requests waiting for a slot").set(len(self._waiting))
+        m.gauge("engine_active_slots",
+                "slots decoding or prefilling").set(
+            sum(1 for s in self._slots if s is not None))
+        if self.paged:
+            m.gauge("engine_pages_in_use",
+                    "live KV blocks").set(self.alloc.pages_in_use)
+        if self.proposer is not None and self.report is not None:
+            m.gauge("engine_acceptance_rate",
+                    "accepted/proposed draft tokens").set(
+                self.report.acceptance_rate)
+
+    def step(self, *, verbose: bool = False) -> StepEvents:
+        """One scheduler iteration: admit arrived requests into free slots,
+        advance at most one prefill chunk per prefilling slot, run one
+        batched decode (or speculative verify) step over the active slots,
+        evict finished slots. Returns the step's :class:`StepEvents` so a
+        caller can stream tokens per step; ``worked=False`` means nothing
+        was resident and the step counter did not advance."""
+        if not self._started:
+            raise RuntimeError("ServingEngine.step() before start()")
+        ev = StepEvents(step=self._step_no)
+        if not self.has_work():
+            ev.worked = False
+            return ev
+        self._events = ev
+        try:
+            with self._ctx():
+                decode_dt = self._step_body(ev, verbose)
+        finally:
+            self._events = None
+        self.report.steps = self._step_no
+        self.last_state = self._state
+        self._sample_metrics(ev, decode_dt)
+        return ev
+
+    def _step_body(self, ev: StepEvents, verbose: bool) -> float:
+        report = self.report
+        slots = self._slots
+        proposer = self.proposer
+        serve = self._serve
+        state = self._state
+        state_dirty = self._state_dirty
+        tok, pos = self._tok, self._pos
+        step = self._step_no
+        decode_dt = 0.0
+        pending: List[Any] = []     # (slot, logits) rows awaiting
+                                    # their batched first argmax
+        # -- admit arrived requests into free slots ----------------
+        admitted = 0
+        for i in range(self.max_batch):
+            idx = self._next_admissible()
+            if idx is None:
+                break
+            if slots[i] is not None:
+                continue
+            cand = self._waiting[idx]
+            if self.paged and (
+                    self._required_pages(cand)
+                    + sum(self._reserve.values())
+                    > self.alloc.pages_free):
+                break               # pool too full — wait for evicts
+            del self._waiting[idx]
+            req = cand
+            t0 = time.perf_counter()
+            if self.paged:
+                state, slot, d = self._admit_paged(
+                    state, req, i, t0, pending)
+                state_dirty |= d
+            else:
+                inputs = self._prefill_inputs(req)
+                logits, rstate = self._prefill_fn(inputs)(
+                    self.params, inputs)
+                state = insert_slot(state, rstate, i)
+                state_dirty = True
+                slot = _Slot(req, self.pos0(req), t0)
+                pending.append((slot, logits[0]))
+            if proposer is not None:
+                slot.prompt_ids = [
+                    int(t) for t in
+                    np.asarray(req.prompt).reshape(-1)]
+                proposer.admit(self, i, slot)
+            report.prefill_s += time.perf_counter() - t0
+            report.admitted += 1
+            slots[i] = slot
+            ev.admitted.append(req.rid)
+            admitted += 1
+        if admitted and self.metrics is not None:
+            self.metrics.counter(
+                "engine_admitted_total",
+                "requests admitted into a slot").inc(admitted)
+
+        # -- advance chunked prefills ------------------------------
+        # (pf_stream gates out whole-prompt slots still waiting on
+        # the batched first-token flush below)
+        for i, s in enumerate(slots):
+            if s is not None and s.phase == "prefill" \
+                    and s.pf_stream is not None:
+                t0 = time.perf_counter()
                 if state_dirty:
-                    # eager insert/reset/scatter ops re-committed leaves
-                    # off the serve shardings; steady-state steps skip this
-                    # (the serve output already carries its out_shardings)
                     state = self._constrain_state(state)
                     state_dirty = False
-                t0 = time.perf_counter()
-                inputs = {
-                    "state": state,
-                    "tokens": jnp.asarray(tok),
-                    "pos": jnp.asarray(pos),
-                }
-                if self.paged:
-                    # non-active rows (free, or mid-chunked-prefill) are
-                    # masked to -1: their stale tok/pos writes redirect to
-                    # the null block instead of corrupting real pages (the
-                    # ring engine was immune — each slot owned its row)
-                    step_tables = self._tables.copy()
-                    for i, s in enumerate(slots):
-                        if s is None or s.phase != "active":
-                            step_tables[i] = -1
-                    inputs["tables"] = jnp.asarray(step_tables)
-                res = serve(self.params, inputs)
-                state = res["state"]
-                nxt = np.asarray(res["next"])
-                dt = time.perf_counter() - t0
-                report.decode_s += dt
-                report.decode_tokens += len(active)
-                report.step_records.append({
-                    "step": step, "active": len(active),
-                    "admitted": admitted, "decode_ms": dt * 1e3})
-                if verbose:
-                    print(f"[engine] step {step}: active={len(active)} "
-                          f"admitted={admitted} {dt*1e3:.2f} ms")
+                state, d = self._advance_prefill(state, i, s,
+                                                 pending)
+                state_dirty |= d
+                report.prefill_s += time.perf_counter() - t0
+        self._flush_first_tokens(pending)
 
-                # -- collect tokens; evict finished slots ------------------
-                for i in active:
-                    s = slots[i]
-                    s.tokens.append(int(nxt[i]))
-                    s.remaining -= 1
-                    s.pos_next += 1
-                    tok[i], pos[i] = nxt[i], s.pos_next
-                    if s.remaining == 0:
-                        state, d = finish(state, i, s)
-                        state_dirty |= d
-                step += 1
-            report.steps = step
-            self.last_state = state
-        return report
+        # -- settle freshly-activated slots ------------------------
+        for i, s in enumerate(slots):
+            if s is not None and s.phase == "active" and \
+                    len(s.tokens) == 1 and s.remaining >= 0:
+                if s.remaining == 0:
+                    state, d = self._finish(state, i, s)
+                    state_dirty |= d
+                else:
+                    tok[i], pos[i] = s.tokens[0], s.pos_next
+
+        active = [i for i, s in enumerate(slots)
+                  if s is not None and s.phase == "active"]
+        if not active:
+            self._state, self._state_dirty = state, state_dirty
+            if self.has_work():
+                self._step_no = step + 1
+            return decode_dt
+
+        # -- speculative: propose → verify → accept → rollback -----
+        if proposer is not None:
+            k = self.spec_k
+            views = [spec.ProposalView(
+                i, slots[i].prompt_ids + slots[i].tokens,
+                int(pos[i])) for i in active]
+            t0 = time.perf_counter()
+            proposals = proposer.propose(views, k)
+            C = k + 1
+            ptok = np.zeros((self.max_batch, C), np.int32)
+            ppos = np.full((self.max_batch, C), -1, np.int32)
+            n_drafts: Dict[int, int] = {}
+            txns: Dict[int, list] = {}
+            for i in active:
+                s = slots[i]
+                props = list(proposals.get(i, []))[:k]
+                # clamp: (a) never emit past the request budget,
+                # (b) never let the draft overhang wrap the logical
+                # window — a wrapped speculative write would destroy
+                # a still-in-window entry, where plain decode only
+                # ever overwrites the exactly-expiring one
+                n = min(len(props), s.remaining - 1)
+                if int(pos[i]) + n >= self.cache_len:
+                    n = max(0, self.cache_len - 1 - int(pos[i]))
+                n_drafts[i] = n
+                report.proposed_tokens += n
+                ptok[i, 0], ppos[i, 0] = tok[i], pos[i]
+                for j in range(n):
+                    ptok[i, j + 1] = int(props[j])
+                    ppos[i, j + 1] = int(pos[i]) + j + 1
+                txns[i] = []
+                state, d = self._ensure_pages(
+                    state, i,
+                    [p % self.cache_len for p in
+                     range(int(pos[i]), int(pos[i]) + n + 1)],
+                    txn=txns[i])
+                state_dirty |= d
+            report.peak_pages = max(report.peak_pages,
+                                    self.alloc.pages_in_use)
+            if state_dirty:
+                state = self._constrain_state(state)
+                state_dirty = False
+            step_tables = self._tables.copy()
+            for i, s in enumerate(slots):
+                if s is None or s.phase != "active":
+                    step_tables[i] = -1
+            res = serve(self.params, state, {
+                "tokens": jnp.asarray(ptok),
+                "positions": jnp.asarray(ppos),
+                "tables": jnp.asarray(step_tables),
+            })
+            state = res["state"]
+            nxt = np.asarray(res["next"])          # (B, C)
+            dt = time.perf_counter() - t0
+            report.decode_s += dt
+            decode_dt = dt
+            emitted_total = 0
+            for i in active:
+                s = slots[i]
+                # exact greedy acceptance: draft j survives iff it
+                # equals the target's own argmax at position j-1;
+                # the first mismatch position contributes the
+                # target's choice as the bonus token
+                a = 0
+                while a < n_drafts[i] and \
+                        int(ptok[i, a + 1]) == int(nxt[i, a]):
+                    a += 1
+                emitted = [int(nxt[i, j]) for j in range(a + 1)]
+                report.accepted_tokens += a
+                state, d = self._rollback_pages(
+                    state, i, txns[i],
+                    ((int(pos[i]) + a) % self.cache_len)
+                    // self.page_size)
+                state_dirty |= d
+                emitted_total += len(emitted)
+                s.tokens.extend(emitted)
+                ev.emitted.setdefault(s.req.rid, []).extend(emitted)
+                s.remaining -= len(emitted)
+                s.pos_next += len(emitted)
+                tok[i], pos[i] = emitted[-1], s.pos_next
+                if s.remaining == 0:
+                    state, d = self._finish(state, i, s)
+                    state_dirty |= d
+            report.decode_tokens += emitted_total
+            report.step_records.append({
+                "step": step, "active": len(active),
+                "admitted": admitted, "decode_ms": dt * 1e3,
+                "emitted": emitted_total})
+            if verbose:
+                print(f"[engine] step {step}: active={len(active)} "
+                      f"emitted={emitted_total} {dt*1e3:.2f} ms")
+            self._state, self._state_dirty = state, state_dirty
+            self._step_no = step + 1
+            return decode_dt
+
+        # -- one batched decode step over every slot ---------------
+        if self.paged:
+            for i in active:
+                state, d = self._ensure_pages(
+                    state, i, [int(pos[i]) % self.cache_len])
+                state_dirty |= d
+            report.peak_pages = max(report.peak_pages,
+                                    self.alloc.pages_in_use)
+        if state_dirty:
+            # eager insert/reset/scatter ops re-committed leaves
+            # off the serve shardings; steady-state steps skip this
+            # (the serve output already carries its out_shardings)
+            state = self._constrain_state(state)
+            state_dirty = False
+        t0 = time.perf_counter()
+        inputs = {
+            "state": state,
+            "tokens": jnp.asarray(tok),
+            "pos": jnp.asarray(pos),
+        }
+        if self.paged:
+            # non-active rows (free, or mid-chunked-prefill) are
+            # masked to -1: their stale tok/pos writes redirect to
+            # the null block instead of corrupting real pages (the
+            # ring engine was immune — each slot owned its row)
+            step_tables = self._tables.copy()
+            for i, s in enumerate(slots):
+                if s is None or s.phase != "active":
+                    step_tables[i] = -1
+            inputs["tables"] = jnp.asarray(step_tables)
+        res = serve(self.params, inputs)
+        state = res["state"]
+        nxt = np.asarray(res["next"])
+        dt = time.perf_counter() - t0
+        report.decode_s += dt
+        decode_dt = dt
+        report.decode_tokens += len(active)
+        report.step_records.append({
+            "step": step, "active": len(active),
+            "admitted": admitted, "decode_ms": dt * 1e3})
+        if verbose:
+            print(f"[engine] step {step}: active={len(active)} "
+                  f"admitted={admitted} {dt*1e3:.2f} ms")
+
+        # -- collect tokens; evict finished slots ------------------
+        for i in active:
+            s = slots[i]
+            s.tokens.append(int(nxt[i]))
+            ev.emitted.setdefault(s.req.rid, []).append(int(nxt[i]))
+            s.remaining -= 1
+            s.pos_next += 1
+            tok[i], pos[i] = nxt[i], s.pos_next
+            if s.remaining == 0:
+                state, d = self._finish(state, i, s)
+                state_dirty |= d
+        self._state, self._state_dirty = state, state_dirty
+        self._step_no = step + 1
+        return decode_dt
+
+    def run(self, requests, *, verbose: bool = False) -> ServeReport:
+        """Serve ``requests`` to completion; returns a :class:`ServeReport`.
+
+        A thin wrapper over the stepper: validate everything up front,
+        :meth:`start`, :meth:`submit` in (arrival, rid) order, then
+        :meth:`drain` — continuous batching, not static batching: neither
+        a long request nor (with chunked prefill) a long *prompt* blocks
+        short requests from cycling through. Byte-identical to the
+        pre-stepper engine for the same request set.
+        """
+        for r in requests:
+            self._validate(r)
+        self.start()
+        for r in sorted(requests, key=lambda r: (r.arrival_step, r.rid)):
+            self.submit(r)
+        return self.drain(verbose=verbose)

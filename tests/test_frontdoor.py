@@ -1,0 +1,480 @@
+"""Front-door + stepper tests: re-entrant engine API equivalence with
+``run()``, mid-decode cancellation (allocator-exact page release), the
+bounded admission queue's 429/408 semantics, SSE streaming over real
+sockets token-identical to ``engine.run()`` (danube + internvl2, with and
+without the ngram proposer), and the metrics plane agreeing with the
+final ``ServeReport``."""
+import asyncio
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import transformer as T
+from repro.runtime import metrics as rmetrics
+from repro.runtime.engine import Request, ServingEngine
+from repro.runtime.frontdoor import (FrontDoor, QueueSettings,
+                                     sse_decode_tokens)
+
+KEY = jax.random.PRNGKey(0)
+P, G, B = 8, 6, 2
+
+_PARAMS = {}
+
+
+def _setup(arch):
+    if arch not in _PARAMS:
+        cfg = dataclasses.replace(configs.get_reduced(arch),
+                                  w4a16_strategy="xla")
+        _PARAMS[arch] = (cfg, T.quantize_params(T.init_params(KEY, cfg),
+                                                cfg, min_size=0))
+    return _PARAMS[arch]
+
+
+def _engine(arch, **kw):
+    cfg, params = _setup(arch)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("prefill_chunk", 4)
+    return ServingEngine(cfg, params, max_batch=B, max_prompt_len=P,
+                         max_new_tokens=G, **kw)
+
+
+def _prompts(cfg, n, *, length=P):
+    toks = jax.random.randint(KEY, (n, length), 0, cfg.vocab_size)
+    return [[int(t) for t in toks[i]] for i in range(n)]
+
+
+def _embeds(cfg, i):
+    return jax.random.normal(jax.random.fold_in(KEY, i),
+                             (cfg.vision_prefix, cfg.d_model), cfg.dtype)
+
+
+def _requests(cfg, prompts, **kw):
+    reqs = []
+    for i, p in enumerate(prompts):
+        extra = dict(kw)
+        if cfg.vision_prefix:
+            extra["prefix_embeds"] = _embeds(cfg, i)
+        reqs.append(Request(rid=i, prompt=p, max_new_tokens=G, **extra))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# metrics plane: nearest-rank percentiles + registry
+# ---------------------------------------------------------------------------
+
+def test_nearest_rank_and_summarize():
+    vs = [5.0, 1.0, 4.0, 2.0, 3.0]
+    assert rmetrics.nearest_rank(vs, 0.5) == 3.0
+    assert rmetrics.nearest_rank(vs, 0.95) == 5.0
+    assert rmetrics.nearest_rank(vs, 1.0) == 5.0
+    assert rmetrics.nearest_rank([7.0], 0.01) == 7.0   # ceil clamps to 1
+    assert rmetrics.nearest_rank([], 0.99) == 0.0
+    with pytest.raises(ValueError):
+        rmetrics.nearest_rank(vs, 0.0)
+    with pytest.raises(ValueError):
+        rmetrics.nearest_rank(vs, 1.5)
+    s = rmetrics.summarize(vs)
+    assert (s["p50"], s["p95"], s["p99"]) == (3.0, 5.0, 5.0)
+    assert s["max"] == 5.0 and s["count"] == 5 and s["mean"] == 3.0
+    empty = rmetrics.summarize([])
+    assert empty["p99"] == 0.0 and empty["count"] == 0
+
+
+def test_registry_render_and_types():
+    reg = rmetrics.MetricsRegistry()
+    c = reg.counter("c_total", "a counter")
+    c.inc()
+    c.inc(2)
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = reg.gauge("g_depth")
+    g.set(4)
+    g.set(1)
+    assert g.value == 1 and g.peak == 4
+    h = reg.histogram("h_seconds")
+    for v in (0.1, 0.2, 0.3):
+        h.observe(v)
+    assert h.percentile(0.5) == 0.2 and h.count == 3
+    # get-or-create returns the same object; kind conflicts are refused
+    assert reg.counter("c_total") is c
+    with pytest.raises(ValueError):
+        reg.gauge("c_total")
+    text = reg.render()
+    assert "# TYPE c_total counter" in text and "c_total 3" in text
+    assert "# HELP c_total a counter" in text
+    assert 'h_seconds{quantile="0.5"} 0.2' in text
+    assert "h_seconds_count 3" in text
+    snap = reg.snapshot()
+    assert snap["c_total"] == 3
+    assert snap["g_depth"] == {"value": 1.0, "peak": 4.0}
+    assert snap["h_seconds"]["p50"] == 0.2
+
+
+def test_sse_decode_tokens():
+    payload = (b"HTTP/1.1 200 OK\r\n\r\n"
+               b"data: {\"rid\": 0, \"tokens\": [1, 2]}\r\n\r\n"
+               b"data: {\"rid\": 0, \"tokens\": [3]}\r\n\r\n"
+               b"event: done\r\ndata: {\"rid\": 0, \"n\": 3}\r\n\r\n")
+    assert sse_decode_tokens(payload) == [1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# stepper API: equivalence with run(), admission ordering, cancellation
+# ---------------------------------------------------------------------------
+
+def _drive_stepper(eng, reqs):
+    """Drive submit/step by hand, collecting per-rid streamed tokens and
+    the admission order."""
+    eng.start()
+    for r in reqs:
+        eng.submit(r)
+    streamed, order = {}, []
+    while eng.has_work():
+        ev = eng.step()
+        order.extend(ev.admitted)
+        for rid, toks in ev.emitted.items():
+            streamed.setdefault(rid, []).extend(toks)
+    return streamed, order
+
+
+def test_stepper_matches_run():
+    cfg, _ = _setup("h2o-danube-1.8b")
+    prompts = _prompts(cfg, 3)
+    eng = _engine("h2o-danube-1.8b")
+    ref = eng.run(_requests(cfg, prompts))
+    streamed, _ = _drive_stepper(eng, _requests(cfg, prompts))
+    assert streamed == ref.results
+    rep = eng.report
+    assert rep.results == ref.results and rep.admitted == 3
+    assert sorted(rep.ttft) == [0, 1, 2]
+    assert all(t >= 0 for t in rep.ttft.values())
+    # the streaming contract: a no-work step reports worked=False
+    assert eng.step().worked is False
+
+
+def test_run_ignores_deadline_and_priority():
+    """Satellite: deadline_s/priority only shape *admission order* under
+    admission='priority'; plain FIFO run() is byte-identical without."""
+    cfg, _ = _setup("h2o-danube-1.8b")
+    prompts = _prompts(cfg, 3)
+    plain = _engine("h2o-danube-1.8b").run(_requests(cfg, prompts))
+    tagged = _engine("h2o-danube-1.8b").run(
+        _requests(cfg, prompts, deadline_s=0.001, priority=7))
+    assert tagged.results == plain.results
+    assert tagged.steps == plain.steps
+
+
+def test_priority_admission_order():
+    cfg, _ = _setup("h2o-danube-1.8b")
+    prompts = _prompts(cfg, 3)
+    eng = ServingEngine(cfg, _setup("h2o-danube-1.8b")[1], max_batch=1,
+                        max_prompt_len=P, max_new_tokens=G, page_size=4,
+                        prefill_chunk=4, admission="priority")
+    reqs = [Request(rid=0, prompt=prompts[0], max_new_tokens=G, priority=0),
+            Request(rid=1, prompt=prompts[1], max_new_tokens=G, priority=5),
+            Request(rid=2, prompt=prompts[2], max_new_tokens=G, priority=5,
+                    deadline_s=0.5)]
+    _, order = _drive_stepper(eng, reqs)
+    # highest priority first; deadline breaks the tie within priority 5
+    assert order == [2, 1, 0]
+    with pytest.raises(ValueError, match="admission"):
+        ServingEngine(cfg, _setup("h2o-danube-1.8b")[1], max_batch=1,
+                      max_prompt_len=P, max_new_tokens=G,
+                      admission="wrong")
+
+
+def test_cancel_mid_decode_with_shared_prefix():
+    """Cancelling one of two requests sharing prefix pages mid-decode
+    evicts its slot and decrefs its pages; the survivor's generation is
+    token-identical to a solo run and the allocator ends exactly empty."""
+    cfg, _ = _setup("h2o-danube-1.8b")
+    prompt = _prompts(cfg, 1)[0]
+    eng = _engine("h2o-danube-1.8b")
+    ref = eng.run([Request(rid=0, prompt=prompt, max_new_tokens=G)])
+    eng.start()
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=G))
+    eng.submit(Request(rid=1, prompt=prompt, max_new_tokens=G))
+    streamed = {}
+    cancelled = False
+    while eng.has_work():
+        ev = eng.step()
+        for rid, toks in ev.emitted.items():
+            streamed.setdefault(rid, []).extend(toks)
+        if not cancelled and streamed.get(0) and streamed.get(1):
+            pages_before = eng.alloc.pages_in_use
+            assert eng.cancel(0) is True
+            assert eng.alloc.pages_in_use < pages_before
+            cancelled = True
+    assert cancelled, "both requests finished before a cancel point"
+    rep = eng.report
+    assert rep.cancelled[0] == streamed[0] and 0 not in rep.results
+    assert rep.results[1] == ref.results[0]
+    assert eng.alloc.pages_in_use == 0
+    assert eng.cancel(0) is False                  # unknown rid: no-op
+
+
+def test_cancel_mid_chunked_prefill():
+    cfg, _ = _setup("h2o-danube-1.8b")
+    prompt = _prompts(cfg, 1)[0]
+    eng = _engine("h2o-danube-1.8b", prefill_chunk=2)   # P=8: 4 chunks
+    eng.start()
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=G))
+    ev = eng.step()                                # one 2-token chunk in
+    assert ev.emitted.get(0) in (None, [])         # still prefilling
+    assert eng.alloc.pages_in_use > 0
+    assert eng.cancel(0) is True
+    assert eng.alloc.pages_in_use == 0
+    assert not eng.has_work()
+    assert eng.report.cancelled[0] == []
+
+
+def test_cancel_waiting_request_never_touches_allocator():
+    cfg, _ = _setup("h2o-danube-1.8b")
+    prompts = _prompts(cfg, 2)
+    eng = _engine("h2o-danube-1.8b")
+    eng.start()
+    for i in range(2):
+        eng.submit(Request(rid=i, prompt=prompts[i], max_new_tokens=G))
+    assert eng.cancel(1) is True                   # still in the queue
+    assert eng.report.cancelled[1] == []
+    rep = eng.drain()
+    assert sorted(rep.results) == [0]
+    assert eng.alloc.pages_in_use == 0
+
+
+def test_submit_before_start_raises():
+    cfg, _ = _setup("h2o-danube-1.8b")
+    eng = _engine("h2o-danube-1.8b")
+    with pytest.raises(RuntimeError, match="start"):
+        eng.submit(Request(rid=0, prompt=_prompts(cfg, 1)[0],
+                           max_new_tokens=G))
+
+
+# ---------------------------------------------------------------------------
+# HTTP front door over real sockets
+# ---------------------------------------------------------------------------
+
+async def _raw(port, head, body=b""):
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    writer.write(head + body)
+    await writer.drain()
+    payload = await reader.read()
+    writer.close()
+    return payload
+
+
+async def _post(port, spec):
+    body = json.dumps(spec).encode()
+    head = (f"POST /v1/generate HTTP/1.1\r\nHost: t\r\n"
+            f"Content-Length: {len(body)}\r\n\r\n").encode()
+    payload = await _raw(port, head, body)
+    return int(payload.split(b" ", 2)[1]), payload
+
+
+async def _get(port, path):
+    payload = await _raw(
+        port, f"GET {path} HTTP/1.1\r\nHost: t\r\n\r\n".encode())
+    return int(payload.split(b" ", 2)[1]), payload
+
+
+def _run_async(coro, timeout=600):
+    return asyncio.run(asyncio.wait_for(coro, timeout))
+
+
+@pytest.mark.parametrize("arch,speculate", [
+    ("h2o-danube-1.8b", None),
+    ("h2o-danube-1.8b", "ngram"),
+    ("internvl2-1b", None),
+    ("internvl2-1b", "ngram"),
+])
+def test_http_streams_match_run(arch, speculate):
+    """Acceptance: concurrent real-socket SSE streams are token-identical
+    to engine.run() — danube + internvl2 (prefix embeds over the wire),
+    paged, with and without the ngram proposer."""
+    from repro.runtime import speculative
+    cfg, _ = _setup(arch)
+    kw = {}
+    if speculate:
+        # repetitive prompts (one 4-token segment tiled to P) so the
+        # prompt-lookup proposer actually proposes something to verify
+        seg = jax.random.randint(KEY, (3, P // 2), 0, cfg.vocab_size)
+        prompts = [[int(t) for t in jnp.tile(seg[i], 2)] for i in range(3)]
+        kw.update(speculate=speculative.make_proposer("ngram",
+                                                      target_cfg=cfg),
+                  spec_k=2)                       # window=16 on danube
+    else:
+        prompts = _prompts(cfg, 3)
+    eng = _engine(arch, **kw)
+    ref = eng.run(_requests(cfg, prompts))
+
+    def spec(i):
+        s = {"prompt": prompts[i], "max_new_tokens": G}
+        if cfg.vision_prefix:
+            s["prefix_embeds"] = [[float(x) for x in row]
+                                  for row in _embeds(cfg, i)]
+        return s
+
+    async def main():
+        fd = FrontDoor(eng, settings=QueueSettings(queue_depth=8))
+        await fd.serve()
+        outs = await asyncio.gather(*(_post(fd.port, spec(i))
+                                      for i in range(3)))
+        report = await fd.shutdown()
+        return outs, report
+
+    outs, report = _run_async(main())
+    assert all(status == 200 for status, _ in outs)
+    got = [sse_decode_tokens(payload) for _, payload in outs]
+    assert got == [ref.results[i] for i in range(3)]
+    assert eng.alloc.pages_in_use == 0
+    assert report.admitted == 3 and not report.cancelled
+    if speculate:
+        assert report.proposed_tokens > 0
+
+
+def test_http_cancel_mid_stream():
+    """Acceptance: a client disconnecting mid-stream evicts its slot and
+    frees its pages while concurrent streams finish token-identical."""
+    cfg, _ = _setup("h2o-danube-1.8b")
+    prompts = _prompts(cfg, 3)
+    eng = _engine("h2o-danube-1.8b")
+    ref = eng.run(_requests(cfg, prompts))
+
+    async def canceller(port):
+        body = json.dumps({"prompt": prompts[0],
+                           "max_new_tokens": G}).encode()
+        reader, writer = await asyncio.open_connection("127.0.0.1", port)
+        writer.write((f"POST /v1/generate HTTP/1.1\r\nHost: t\r\n"
+                      f"Content-Length: {len(body)}\r\n\r\n").encode()
+                     + body)
+        await writer.drain()
+        await reader.readuntil(b"\r\n\r\n")        # response headers
+        await reader.readuntil(b"\r\n\r\n")        # first token event
+        writer.close()                             # hang up mid-stream
+        await writer.wait_closed()
+
+    async def main():
+        fd = FrontDoor(eng, settings=QueueSettings(queue_depth=8))
+        await fd.serve()
+        first, *rest = await asyncio.gather(
+            canceller(fd.port),
+            *(_post(fd.port, {"prompt": prompts[i], "max_new_tokens": G})
+              for i in (1, 2)))
+        report = await fd.shutdown()
+        return rest, report
+
+    rest, report = _run_async(main())
+    assert [sse_decode_tokens(p) for _, p in rest] == [ref.results[1],
+                                                       ref.results[2]]
+    # rid 0 was the first connection's; it must be gone from results and
+    # recorded as cancelled with however many tokens it got out
+    (crid,) = report.cancelled
+    assert crid not in report.results
+    assert len(report.cancelled[crid]) < G
+    assert eng.alloc.pages_in_use == 0
+    assert eng.metrics.get("frontdoor_cancelled_total").value == 1
+
+
+def test_http_429_and_408_without_touching_engine():
+    """Acceptance: queue-full 429 and expired-deadline 408 happen entirely
+    at the front door — the engine never runs a step for them."""
+    cfg, _ = _setup("h2o-danube-1.8b")
+    prompts = _prompts(cfg, 3)
+    eng = _engine("h2o-danube-1.8b")
+
+    async def main():
+        fd = FrontDoor(eng, settings=QueueSettings(queue_depth=1))
+        await fd.serve(start_driver=False)         # queue can only fill
+        # immediate 408: deadline already spent on arrival
+        s408, p408 = await _post(fd.port, {
+            "prompt": prompts[0], "max_new_tokens": G, "deadline_s": 0})
+        # expired-in-queue 408: enqueued, deadline passes pre-admission
+        slow = asyncio.create_task(_post(fd.port, {
+            "prompt": prompts[1], "max_new_tokens": G,
+            "deadline_s": 0.05}))
+        await asyncio.sleep(0.02)                  # let it enqueue
+        # queue is now full (depth 1): next request is shed as 429
+        s429, _ = await _post(fd.port, {"prompt": prompts[2],
+                                        "max_new_tokens": G})
+        await asyncio.sleep(0.1)                   # deadline passes
+        assert eng.report.steps == 0               # engine untouched
+        assert eng.alloc.pages_in_use == 0
+        fd.start_driver()
+        s_slow, _ = await slow
+        report = await fd.shutdown()
+        return s408, p408, s429, s_slow, report
+
+    s408, p408, s429, s_slow, report = _run_async(main())
+    assert s408 == 408 and b"deadline" in p408
+    assert s429 == 429
+    assert s_slow == 408                           # expired while queued
+    assert report.rejected_429 == 1 and report.rejected_408 == 2
+    assert report.steps == 0 and not report.results
+
+
+def test_http_metrics_agree_with_report():
+    """Acceptance: GET /metrics and the final ServeReport agree on
+    admitted/rejected counts, queue depth peak and latency quantiles."""
+    cfg, _ = _setup("h2o-danube-1.8b")
+    prompts = _prompts(cfg, 3)
+    eng = _engine("h2o-danube-1.8b")
+
+    async def main():
+        fd = FrontDoor(eng, settings=QueueSettings(queue_depth=8))
+        await fd.serve()
+        await asyncio.gather(*(
+            _post(fd.port, {"prompt": prompts[i], "max_new_tokens": G})
+            for i in range(3)))
+        status, payload = await _get(fd.port, "/metrics")
+        sh, ph = await _get(fd.port, "/healthz")
+        report = await fd.shutdown()
+        return status, payload, sh, ph, report, fd.metrics
+
+    status, payload, sh, ph, report, m = _run_async(main())
+    assert status == 200 and sh == 200
+    assert json.loads(ph.split(b"\r\n\r\n", 1)[1])["ok"] is True
+    text = payload.split(b"\r\n\r\n", 1)[1].decode()
+    assert "# TYPE engine_queue_depth gauge" in text
+    assert f"engine_admitted_total {report.admitted}" in text
+    assert report.admitted == 3
+    assert m.get("frontdoor_rejected_429_total").value == report.rejected_429
+    assert m.get("frontdoor_rejected_408_total").value == report.rejected_408
+    assert m.get("frontdoor_queue_depth").peak == report.peak_queue_depth
+    assert m.get("engine_e2e_seconds").summary() == report.latency_stats()
+    assert m.get("engine_ttft_seconds").summary() == report.ttft_stats()
+    assert m.get("engine_pages_in_use").value == 0
+
+
+def test_http_rejects_malformed_requests():
+    cfg, _ = _setup("h2o-danube-1.8b")
+    eng = _engine("h2o-danube-1.8b")
+    good = _prompts(cfg, 1)[0]
+
+    async def main():
+        fd = FrontDoor(eng)
+        await fd.serve()
+        out = {
+            "no_prompt": (await _post(fd.port, {}))[0],
+            "empty": (await _post(fd.port, {"prompt": []}))[0],
+            "non_int": (await _post(fd.port, {"prompt": ["a"]}))[0],
+            "too_long": (await _post(
+                fd.port, {"prompt": list(range(P + 1))}))[0],
+            "bad_gen": (await _post(
+                fd.port, {"prompt": good, "max_new_tokens": 0}))[0],
+            "embeds": (await _post(
+                fd.port, {"prompt": good,
+                          "prefix_embeds": [[0.0]]}))[0],
+            "lost": (await _get(fd.port, "/nope"))[0],
+        }
+        report = await fd.shutdown()
+        return out, report
+
+    out, report = _run_async(main())
+    assert out == {"no_prompt": 400, "empty": 400, "non_int": 400,
+                   "too_long": 400, "bad_gen": 400, "embeds": 400,
+                   "lost": 404}
+    assert report.steps == 0 and report.admitted == 0

@@ -2,6 +2,7 @@
 plus data_shardings edge cases the drivers feed it (0-d leaves)."""
 import jax
 import jax.numpy as jnp
+import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.launch.serve import main as serve_main
@@ -43,6 +44,36 @@ def test_serve_cli_arrival_simulation(tmp_path):
         "--requests", "3", "--arrival-every", "1",
         "--prompt-len", "8", "--gen", "3", "--strategy", "xla",
         "--plan-cache", str(tmp_path / "plans.json"),
+    ])
+    assert gen.shape == (3, 3)
+
+
+def test_serve_cli_variable_prompt_len():
+    """--prompt-len MIN:MAX draws a length per request; the fixed-N form
+    stays the default path."""
+    from repro.launch.serve import parse_prompt_len
+    assert parse_prompt_len("32") == (32, 32)
+    assert parse_prompt_len("4:8") == (4, 8)
+    with pytest.raises(ValueError, match="MIN:MAX"):
+        parse_prompt_len("4:x")
+    with pytest.raises(ValueError, match="MIN <= MAX"):
+        parse_prompt_len("8:4")
+    gen = serve_main([
+        "--arch", "olmoe-1b-7b", "--reduced", "--batch", "2",
+        "--requests", "3", "--prompt-len", "4:8", "--gen", "3",
+        "--strategy", "xla",
+    ])
+    assert gen.shape == (3, 3)
+
+
+def test_serve_cli_http_front_door():
+    """--http 0 routes the same arrival simulation through real-socket
+    SSE clients against the asyncio front door."""
+    gen = serve_main([
+        "--arch", "h2o-danube-1.8b", "--reduced", "--batch", "2",
+        "--requests", "3", "--arrival-every", "1",
+        "--prompt-len", "8", "--gen", "3", "--strategy", "xla",
+        "--http", "0", "--queue-depth", "4",
     ])
     assert gen.shape == (3, 3)
 
