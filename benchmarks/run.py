@@ -442,6 +442,124 @@ def bench_speculative(out_path: str = "BENCH_speculative.json") -> dict:
 
 
 # ---------------------------------------------------------------------------
+# Paged-attention sweep: ring vs gather vs fused decode attention across
+# context lengths and KV formats — bytes-moved (the paper's bottleneck
+# metric) and tok/s per path, plus what the planner picks per backend;
+# persisted as BENCH_paged_attn.json (CI artifact)
+# ---------------------------------------------------------------------------
+
+def bench_paged_attn(out_path: str = "BENCH_paged_attn.json") -> dict:
+    """Op-level decode-attention sweep: the dense ring read, the XLA
+    block-table gather (two passes over the KV window), and the fused
+    Pallas kernel (one pass, in-VMEM dequant) on identical KV contents.
+    Wall rows are CPU-trend numbers (the fused kernel runs in interpret
+    mode off-TPU); the bytes/roofline columns are the decision metric —
+    the gather's HBM round-trip is what the fused path deletes."""
+    import dataclasses
+
+    from repro.core import quant as q
+    from repro.kernels.paged_attention import fused_paged_attention
+    from repro.models import attention
+    from repro.runtime import kvcache as kvc
+
+    print("# paged_attn: name,us_per_call,derived(tok/s)")
+    B, Hq, Hkv, D, ps = 2, 4, 2, 64, 32
+    key = jax.random.PRNGKey(0)
+
+    def build(ctx, fmt_name):
+        fmt = q.get_kv_format(fmt_name)
+        T = ctx // ps
+        nb = 1 + B * T
+        kk, kv_ = jax.random.split(jax.random.fold_in(key, ctx))
+        k = jax.random.normal(kk, (B, ctx, Hkv, D), jnp.float32)
+        v = jax.random.normal(kv_, (B, ctx, Hkv, D), jnp.float32)
+        kq, ks = q.kv_quantize(k, fmt)
+        vq, vs = q.kv_quantize(v, fmt)
+
+        def pack(x, tail):
+            full = jnp.zeros((nb, ps) + tail, x.dtype)
+            return full.at[1:].set(x.reshape(B * T, ps, *tail))
+
+        pool = kvc.PagedKVCache(
+            k_pool=pack(kq, (Hkv, D)), v_pool=pack(vq, (Hkv, D)),
+            page_pos=jnp.full((nb, ps), -1, jnp.int32).at[1:].set(
+                jnp.tile(jnp.arange(ctx, dtype=jnp.int32).reshape(T, ps),
+                         (B, 1))),
+            k_scale=None if ks is None else pack(ks, (Hkv,)),
+            v_scale=None if vs is None else pack(vs, (Hkv,)))
+        tables = (1 + jnp.arange(B * T, dtype=jnp.int32)).reshape(B, T)
+        ring = attention.KVCache(
+            k=k, v=v, pos=jnp.tile(jnp.arange(ctx, dtype=jnp.int32),
+                                   (B, 1)))
+        pos = jnp.full((B,), ctx - 1, jnp.int32)
+        qv = jax.random.normal(jax.random.fold_in(key, 1),
+                               (B, Hq, D), jnp.float32)
+        return qv, pool, tables, pos, ring, fmt
+
+    cells = []
+    for fmt_name in ("kv_fp16", "kv8_channel"):
+        quantized = q.get_kv_format(fmt_name).quantized
+        for ctx in (128, 256, 512):
+            qv, pool, tables, pos, ring, fmt = build(ctx, fmt_name)
+            S = planning.choose_kv_partitions(B, Hkv, tables.shape[1])
+            fns = {
+                # ring stores raw cache-dtype rows — the same fp16 read
+                # regardless of the pool's block format
+                "ring": jax.jit(lambda qq, rr=ring, pp=pos:
+                                attention.decode_attention(qq, rr, pp)),
+                "gather": jax.jit(lambda qq, po=pool, tb=tables, pp=pos:
+                                  kvc.paged_decode_attention(
+                                      qq, po, tb, pp, fmt=fmt,
+                                      out_dtype=jnp.float32)),
+                "fused": jax.jit(lambda qq, po=pool, tb=tables, pp=pos:
+                                 fused_paged_attention(
+                                     qq, po, tb, pp, fmt=fmt,
+                                     out_dtype=jnp.float32,
+                                     kv_partitions=S)),
+            }
+            outs = {p: fn(qv) for p, fn in fns.items()}
+            maxdiff = float(jnp.max(jnp.abs(outs["fused"] - outs["gather"])))
+            problem = planning.AttentionProblem(
+                B=B, Hq=Hq, Hkv=Hkv, D=D, cache_len=ctx, page_size=ps,
+                kv_format=fmt_name, paged=True, act_bytes=4)
+            picks = {
+                be: planning.plan_attention(
+                    dataclasses.replace(problem, backend=be)).path
+                for be in ("cpu", "tpu")}
+            for path, fn in fns.items():
+                us = _time(fn, qv)
+                gbytes = cm.paged_attn_bytes(
+                    path, B, Hq, Hkv, D, ctx, act_bytes=4,
+                    quantized=quantized and path != "ring",
+                    kv_partitions=S if path == "fused" else 1)
+                t_tpu = cm.attn_decode_time_tpu(
+                    path, B, Hq, Hkv, D, ctx, act_bytes=4,
+                    quantized=quantized and path != "ring",
+                    kv_partitions=S if path == "fused" else 1)
+                name = f"paged_attn/{fmt_name}/ctx{ctx}/{path}"
+                print(f"{name},{us:.1f},{B / (us / 1e6):.1f}")
+                cells.append({
+                    "name": name, "path": path, "kv_format": fmt_name,
+                    "ctx": ctx, "batch": B, "heads": Hq,
+                    "kv_heads": Hkv, "head_dim": D, "page_size": ps,
+                    "kv_partitions": S if path == "fused" else 1,
+                    "us_per_step": round(us, 2),
+                    "tok_per_s": round(B / (us / 1e6), 2),
+                    "bytes_moved": int(gbytes),
+                    "roofline_tpu_us": round(t_tpu * 1e6, 3),
+                    "planner_pick_cpu": picks["cpu"],
+                    "planner_pick_tpu": picks["tpu"],
+                    "fused_vs_gather_maxdiff": maxdiff,
+                })
+    blob = {"format": BENCH_FORMAT, "backend": jax.default_backend(),
+            "cells": cells}
+    with open(out_path, "w") as f:
+        json.dump(blob, f, indent=1, sort_keys=True)
+    print(f"# paged_attn: wrote {len(cells)} cells -> {out_path}")
+    return blob
+
+
+# ---------------------------------------------------------------------------
 # Front-door sweep: the async HTTP serving path under rising arrival rates —
 # real-socket SSE clients against the bounded admission queue; served ratio,
 # TTFT/e2e quantiles and 429/408 shed counts land in BENCH_frontdoor.json
@@ -539,6 +657,7 @@ BENCHES = {
     "formats": bench_formats,
     "serving": bench_serving,
     "paged_kv": bench_paged_kv,
+    "paged_attn": bench_paged_attn,
     "speculative": bench_speculative,
     "frontdoor": bench_frontdoor,
 }
@@ -551,11 +670,13 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true",
                     help="run the quick perf snapshot, the fused-format "
                          "sweep, the serving sweep, the ring-vs-paged KV "
-                         "sweep, the speculative sweep and the front-door "
-                         "arrival sweep, writing BENCH_quickstart.json, "
+                         "sweep, the paged-attention path sweep, the "
+                         "speculative sweep and the front-door arrival "
+                         "sweep, writing BENCH_quickstart.json, "
                          "BENCH_formats.json, BENCH_serving.json, "
-                         "BENCH_paged_kv.json, BENCH_speculative.json and "
-                         "BENCH_frontdoor.json (the CI artifacts)")
+                         "BENCH_paged_kv.json, BENCH_paged_attn.json, "
+                         "BENCH_speculative.json and BENCH_frontdoor.json "
+                         "(the CI artifacts)")
     ap.add_argument("--format", default=quant.DEFAULT_FORMAT,
                     help="QuantFormat name for quantized benches "
                          "(w4a16_g128 | w8a16_channel | w4a8_g128 | ...)")
@@ -570,6 +691,7 @@ def main(argv=None) -> None:
         bench_formats()
         bench_serving()
         bench_paged_kv()
+        bench_paged_attn()
         bench_speculative()
         bench_frontdoor()
         return

@@ -199,3 +199,65 @@ def w4a8_time_tpu_fused(M: int, N: int, K: int, *, group: int = 128,
     twice the bf16 MAC rate (v5e int8 peak is 2× bf16)."""
     traffic = M * K + 0.5 * K * N + 4.0 * K * N / max(group, 1) + 2 * M * N
     return max((2 * M * N * K) / (2 * spec.flops), traffic / spec.hbm_bw)
+
+
+# ---------------------------------------------------------------------------
+# Decode-attention traffic model (ring vs gather vs fused-paged)
+# ---------------------------------------------------------------------------
+#
+# Decode attention is the same bottleneck the paper measures for W4A16
+# GEMM, transposed onto the KV cache: bandwidth-bound, and the naive
+# quantized path pays an extra round-trip through global memory (gather +
+# dequantize to an HBM staging buffer, then read it back for attention).
+# These entries price that round-trip so the planner can charge it.
+
+def kv_bytes_per_token(Hkv: int, D: int, *, quantized: bool,
+                       act_bytes: int = 2) -> float:
+    """HBM bytes to read one cached token's K+V across all kv-heads:
+    payload (int8 or the activation dtype) plus the per-(token, head)
+    fp32 scale pair for quantized formats."""
+    payload = 1 if quantized else act_bytes
+    scales = 2 * 4 * Hkv if quantized else 0
+    return 2 * payload * Hkv * D + scales
+
+
+def paged_attn_bytes(path: str, B: int, Hq: int, Hkv: int, D: int,
+                     ctx: int, *, quantized: bool, act_bytes: int = 2,
+                     kv_partitions: int = 1) -> float:
+    """HBM bytes moved by one decode step of attention over a ctx-token
+    window, per path:
+
+    - ``ring``: dense fp16 ring buffer, read once (ring stores no
+      quantized payloads).
+    - ``gather``: pool read + the dequantized window *written to HBM and
+      read back* — the two-pass round-trip the fused kernel deletes.
+    - ``fused``: pool read once + O(S) combine partials.
+    """
+    q_out = 2 * B * Hq * D * act_bytes              # q in, out back
+    window = B * ctx
+    if path == "ring":
+        return window * 2 * act_bytes * Hkv * D + q_out
+    pool = window * kv_bytes_per_token(Hkv, D, quantized=quantized,
+                                       act_bytes=act_bytes)
+    if path == "gather":
+        staged = window * 2 * act_bytes * Hkv * D   # dequantized window
+        return pool + 2 * staged + q_out            # write + read back
+    if path == "fused":
+        partials = kv_partitions * B * Hq * (D + 2) * 4 * 2
+        return pool + q_out + partials
+    raise ValueError(f"unknown attention path {path!r} "
+                     "(expected ring | gather | fused)")
+
+
+def attn_decode_time_tpu(path: str, B: int, Hq: int, Hkv: int, D: int,
+                         ctx: int, *, quantized: bool, act_bytes: int = 2,
+                         kv_partitions: int = 1,
+                         spec: TPUv5eSpec = TPU_V5E) -> float:
+    """Roofline time of one decode-attention step: QK^T + PV flops vs the
+    path's HBM traffic. Decode is firmly bandwidth-bound (arithmetic
+    intensity ~1 flop/byte), so the bytes term decides the ranking."""
+    flops = 4 * B * Hq * D * ctx                    # QK^T + PV
+    bytes_moved = paged_attn_bytes(
+        path, B, Hq, Hkv, D, ctx, quantized=quantized,
+        act_bytes=act_bytes, kv_partitions=kv_partitions)
+    return max(flops / spec.flops, bytes_moved / spec.hbm_bw)

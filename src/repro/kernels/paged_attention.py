@@ -1,0 +1,241 @@
+"""Fused paged-attention decode kernel: block-table walk + KV dequant +
+online softmax in ONE pass over the KV working set.
+
+The paper's profiling says bandwidth-bound decode loses to *extra
+global-memory traffic*, not compute — and the XLA gather path is exactly
+that: ``kvcache.gather_window`` materializes each slot's whole (dequantized)
+KV window to HBM, then ``attention.decode_attention`` reads it back. This
+kernel walks the per-slot block tables *inside* the kernel instead:
+
+  grid ``(B·Hkv, S, P)`` — one (slot, kv-head) pair per row of the first
+  axis; the slot's ``T = S·P`` table entries are split into ``S`` Split-K
+  style partitions of ``P`` physical pages each (``planning.
+  choose_kv_partitions`` — the paper's K ≫ N occupancy fix, applied to the
+  KV axis: decode runs at B·Hkv tiles, which underfills the chip exactly
+  like the paper's Fig. 2 shapes).
+
+  block tables + positions ride scalar prefetch
+  (``pltpu.PrefetchScalarGridSpec``), so the K/V BlockSpec index maps
+  resolve ``tables[slot, s·P + p]`` to a *physical page* and the pages
+  stream through VMEM double-buffering — the gather never exists in HBM.
+
+  a :class:`~repro.kernels.template.DensePages` /
+  :class:`~repro.kernels.template.Int8ChannelPages` KV stage produces the
+  in-VMEM (page_size, D) tiles (identity load or per-(token, head) INT8
+  dequant matching ``kv_dequantize`` exactly), and the flash-decoding
+  online softmax runs per partition with ``(m, l, acc)`` in VMEM scratch.
+
+  each partition flushes unnormalized ``(acc, m, l)`` partials; a small
+  host-side combine epilogue merges partitions (``exp(m_s - m_max)``
+  rescale) and normalizes — the Split-K phase-3 reduce of Alg. 1, at
+  O(B·Hq·S·D) fp32 bytes instead of a second trip over the window.
+
+Masking is purely positional via the pool's ``page_pos`` tags (``-1`` =
+empty — the null block a ``-1`` table entry resolves to is all ``-1`` tags),
+so ring-wrap SWA and vision-prefix semantics carry over from the gather
+path verbatim. Token parity with gather + ``decode_attention`` is asserted
+by tests/test_paged_attention.py.
+
+``interpret=None`` auto-selects interpret mode on CPU hosts
+(``common.resolve_interpret``) so the parity suite runs on CPU CI, same as
+the GEMM template kernels; the planner (``planning.plan_attention``) never
+*auto*-chooses this path off-TPU.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quant import KVFormat
+from repro.kernels import common, template
+
+NEG_INF = -1e30
+LANES = 128
+
+__all__ = ["fused_paged_attention", "kv_stage_for"]
+
+
+def kv_stage_for(pool, fmt: KVFormat):
+    """Build the KV stage for a pool/format pair (the attention analogue of
+    picking a WeightStage per QuantFormat)."""
+    if not fmt.quantized:
+        return template.DensePages(k_pool=pool.k_pool, v_pool=pool.v_pool)
+    if pool.k_scale is None or pool.v_scale is None:
+        raise ValueError(
+            f"KV format {fmt.name!r} stores per-(token, head) scales, but "
+            f"the pool carries none — was it built with init_pool(..., "
+            f"kv_format={fmt.name!r})?")
+    return template.Int8ChannelPages(
+        k_pool=pool.k_pool, v_pool=pool.v_pool,
+        k_scale=pool.k_scale, v_scale=pool.v_scale)
+
+
+def _make_kernel(stage, *, Hkv: int, P: int, window: int, n_stage: int,
+                 compute_dtype):
+    def kernel(tbl_ref, pos_ref, q_ref, *rest):
+        # tbl_ref (B, S*P) / pos_ref (B,) are the scalar-prefetch operands;
+        # the same refs drive the BlockSpec index maps below.
+        stage_refs = rest[:n_stage]
+        pp_ref, o_ref, mo_ref, lo_ref, m_ref, l_ref, acc_ref = rest[n_stage:]
+        bh = pl.program_id(0)
+        p = pl.program_id(2)
+
+        @pl.when(p == 0)
+        def _init():
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        q = q_ref[0, 0]                                   # (G, D)
+        k, v = stage.produce(stage_refs, compute_dtype)   # (ps, D) each
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (G, ps)
+
+        # pos-tag masking — identical to prefix_chunk_attention's
+        # ``kpos >= 0 & kpos <= qpos`` (+ window); the null block's tags
+        # are all -1, so unmapped table entries mask themselves out
+        kpos = pp_ref[0]                                  # (ps,) int32
+        qpos = pos_ref[bh // Hkv]
+        valid = (kpos >= 0) & (kpos <= qpos)
+        if window:
+            valid &= kpos > qpos - window
+        s = jnp.where(valid[None, :], s, NEG_INF)
+
+        m_prev = m_ref[:, :1]                             # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        pexp = jnp.exp(s - m_new)                         # (G, ps)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = jnp.broadcast_to(
+            l_ref[:, :1] * corr + jnp.sum(pexp, axis=-1, keepdims=True),
+            l_ref.shape)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            pexp.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+        @pl.when(p == P - 1)
+        def _flush():
+            o_ref[0, 0, 0] = acc_ref[...]                 # unnormalized
+            mo_ref[0, 0, 0] = m_ref[...]
+            lo_ref[0, 0, 0] = l_ref[...]
+
+    return kernel
+
+
+def fused_paged_attention(
+    q: jax.Array,                 # (B, Hq, D) — one new token per slot
+    pool,                         # kvcache.PagedKVCache (one layer)
+    tables: jax.Array,            # (B, T) int32 block tables, -1 = unmapped
+    pos: jax.Array,               # (B,) int32 absolute positions
+    *,
+    window: int = 0,
+    fmt: KVFormat,
+    out_dtype,
+    kv_partitions: Optional[int] = None,
+    interpret=None,
+) -> jax.Array:
+    """One-pass paged decode attention; drop-in for ``gather_window`` +
+    ``decode_attention`` (same masking, same dtype policy, same output).
+
+    ``kv_partitions`` is the Split-K degree over the page axis (None →
+    ``planning.choose_kv_partitions``); ``interpret=None`` auto-selects
+    interpret mode on CPU.
+    """
+    interpret = common.resolve_interpret(interpret)
+    B, Hq, D = q.shape
+    ps = pool.page_size
+    Hkv = pool.k_pool.shape[2]
+    G = Hq // Hkv
+    T = tables.shape[1]
+    if kv_partitions is None:
+        from repro.kernels import planning  # lazy: keep module load light
+
+        kv_partitions = planning.choose_kv_partitions(B, Hkv, T)
+    S = max(1, min(int(kv_partitions), T))
+    if T % S:
+        raise ValueError(
+            f"kv_partitions={S} must divide the table length T={T} "
+            f"(choose_kv_partitions only returns divisors)")
+    P = T // S
+
+    # host-side prep, mirroring the gather path's dtype policy exactly:
+    # q pre-scaled in fp32 then cast to the cache compute dtype
+    compute_dtype = jnp.dtype(out_dtype)
+    qg = (q.reshape(B, Hkv, G, D).astype(jnp.float32)
+          * (D ** -0.5)).astype(compute_dtype)
+    bt = jnp.where(tables < 0, 0, tables).astype(jnp.int32)   # NULL_BLOCK=0
+    qpos = pos.astype(jnp.int32)
+
+    stage = kv_stage_for(pool, fmt)
+    operands = stage.operands()
+    n_stage = len(operands)
+
+    def slot(bh):
+        return bh // Hkv
+
+    def head(bh):
+        return bh % Hkv
+
+    def page(bh, s, p, tbl, _):
+        return tbl[slot(bh), s * P + p]
+
+    in_specs = [pl.BlockSpec((1, 1, G, D),
+                             lambda bh, s, p, tbl, pp:
+                             (slot(bh), head(bh), 0, 0))]
+    for shape in stage.block_shapes(ps, D):
+        if len(shape) == 4:           # payload pool (nb, ps, Hkv, D)
+            in_specs.append(pl.BlockSpec(
+                shape, lambda bh, s, p, tbl, pp:
+                (page(bh, s, p, tbl, pp), 0, head(bh), 0)))
+        else:                         # scale pool (nb, ps, Hkv)
+            in_specs.append(pl.BlockSpec(
+                shape, lambda bh, s, p, tbl, pp:
+                (page(bh, s, p, tbl, pp), 0, head(bh))))
+    in_specs.append(pl.BlockSpec(                  # page_pos tags (nb, ps)
+        (1, ps), lambda bh, s, p, tbl, pp: (page(bh, s, p, tbl, pp), 0)))
+
+    def part_spec(last):
+        return pl.BlockSpec((1, 1, 1, G, last),
+                            lambda bh, s, p, tbl, pp:
+                            (slot(bh), head(bh), s, 0, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B * Hkv, S, P),
+        in_specs=in_specs,
+        out_specs=[part_spec(D), part_spec(LANES), part_spec(LANES)],
+        scratch_shapes=[
+            pltpu.VMEM((G, LANES), jnp.float32),      # running max
+            pltpu.VMEM((G, LANES), jnp.float32),      # running denom
+            pltpu.VMEM((G, D), jnp.float32),          # unnormalized acc
+        ],
+    )
+    o_part, m_part, l_part = pl.pallas_call(
+        _make_kernel(stage, Hkv=Hkv, P=P, window=window, n_stage=n_stage,
+                     compute_dtype=compute_dtype),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, S, G, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, S, G, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, S, G, LANES), jnp.float32),
+        ],
+        compiler_params=common.compiler_params(
+            ("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(bt, qpos, qg, *operands, pool.page_pos)
+
+    # combine epilogue: merge the S partitions' (acc, m, l) and normalize —
+    # at S == 1 this is exactly the in-kernel flash normalization
+    m_p = m_part[..., 0]                               # (B, Hkv, S, G)
+    l_p = l_part[..., 0]
+    m_max = jnp.max(m_p, axis=2)                       # (B, Hkv, G)
+    alpha = jnp.exp(m_p - m_max[:, :, None])           # (B, Hkv, S, G)
+    l_tot = jnp.sum(l_p * alpha, axis=2)               # (B, Hkv, G)
+    acc = jnp.sum(o_part * alpha[..., None], axis=2)   # (B, Hkv, G, D)
+    out = acc / jnp.maximum(l_tot, 1e-30)[..., None]
+    return out.reshape(B, Hq, D).astype(q.dtype)

@@ -51,8 +51,10 @@ from repro.core import compat  # noqa: F401  (registers vmap rules "xla" needs)
 from repro.core import costmodel
 from repro.core.quant import (
     DEFAULT_FORMAT,
+    DEFAULT_KV_FORMAT,
     QuantizedTensor,
     dequantize,
+    get_kv_format,
     w4a8_matmul_ref,
     w4a16_format_for,
 )
@@ -69,6 +71,8 @@ __all__ = [
     "plan_matmul", "resolve_plan", "execute", "shard_problem",
     "PlanCache", "PLAN_CACHE", "load_plan_cache", "save_plan_cache",
     "choose_split_k", "num_cores",
+    "AttentionProblem", "AttentionPlan", "register_attn_path",
+    "available_attn_paths", "plan_attention", "choose_kv_partitions",
 ]
 
 
@@ -819,3 +823,170 @@ def plan_for_params(params, M: int, *, refine: bool = False,
     for key in ambiguous:
         del plans[key]
     return plans
+
+
+# ---------------------------------------------------------------------------
+# Decode-attention planning: ring vs gather vs fused-paged.
+#
+# The same decision structure as plan_matmul, transposed onto the KV cache:
+# each path is a registered entry with a roofline cost
+# (costmodel.attn_decode_time_tpu) and a supports() predicate, Pallas paths
+# pay the interpret penalty off-TPU, and a forced path that can't serve the
+# problem is refused loudly. Execution routing lives with the cache
+# (runtime/kvcache.py:paged_decode_attention), not here — the planner only
+# names the path, so kernels/ stays import-independent of runtime/.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttentionProblem:
+    """One decode-attention step: B query tokens against a ctx-token
+    cached window, Hq query heads over Hkv KV heads of dim D."""
+    B: int
+    Hq: int
+    Hkv: int
+    D: int
+    cache_len: int
+    page_size: int = 16
+    window: int = 0
+    kv_format: str = DEFAULT_KV_FORMAT
+    paged: bool = True
+    backend: str = "cpu"
+    act_bytes: int = 2
+
+    @property
+    def ctx(self) -> int:
+        return self.window or self.cache_len
+
+    @property
+    def pages(self) -> int:
+        return max(1, -(-self.cache_len // max(self.page_size, 1)))
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionPlan:
+    path: str                     # "ring" | "gather" | "fused"
+    kv_partitions: int = 1        # Split-K degree over the page axis
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnPath:
+    name: str
+    cost: Callable[["AttentionProblem", "AttentionPlan"], float]
+    supports: Callable[["AttentionProblem"], bool]
+
+
+_ATTN_REGISTRY: Dict[str, AttnPath] = {}
+
+
+def register_attn_path(name: str, *, cost, supports=None):
+    _ATTN_REGISTRY[name] = AttnPath(
+        name=name, cost=cost, supports=supports or (lambda p: True))
+
+
+def available_attn_paths() -> Tuple[str, ...]:
+    return tuple(_ATTN_REGISTRY)
+
+
+def choose_kv_partitions(B: int, Hkv: int, pages: int) -> int:
+    """Split-K over the page axis: decode attention runs at B·Hkv grid
+    tiles, which underfills the chip exactly like the paper's K ≫ N GEMMs
+    (Fig. 2) — partition the table until the cores fill, staying on a
+    power-of-2 divisor of the table length so partitions tile evenly."""
+    cores = num_cores()
+    tiles = max(1, B * Hkv)
+    if tiles >= cores or pages < 2:
+        return 1
+    want = min(cores // tiles, pages)
+    s = 1
+    while s * 2 <= want and pages % (s * 2) == 0:
+        s *= 2
+    return s
+
+
+def _attn_quantized(problem: AttentionProblem) -> bool:
+    return get_kv_format(problem.kv_format).quantized
+
+
+def _attn_pallas_factor(problem: AttentionProblem) -> float:
+    return 1.0 if problem.backend == "tpu" else _INTERPRET_PENALTY
+
+
+def _cost_attn_ring(problem: AttentionProblem, plan: AttentionPlan) -> float:
+    return costmodel.attn_decode_time_tpu(
+        "ring", problem.B, problem.Hq, problem.Hkv, problem.D, problem.ctx,
+        quantized=False, act_bytes=problem.act_bytes)
+
+
+def _cost_attn_gather(problem: AttentionProblem,
+                      plan: AttentionPlan) -> float:
+    return costmodel.attn_decode_time_tpu(
+        "gather", problem.B, problem.Hq, problem.Hkv, problem.D,
+        problem.ctx, quantized=_attn_quantized(problem),
+        act_bytes=problem.act_bytes)
+
+
+def _cost_attn_fused(problem: AttentionProblem,
+                     plan: AttentionPlan) -> float:
+    return costmodel.attn_decode_time_tpu(
+        "fused", problem.B, problem.Hq, problem.Hkv, problem.D,
+        problem.ctx, quantized=_attn_quantized(problem),
+        act_bytes=problem.act_bytes,
+        kv_partitions=plan.kv_partitions) * _attn_pallas_factor(problem)
+
+
+register_attn_path("ring", cost=_cost_attn_ring,
+                   supports=lambda p: not p.paged)
+register_attn_path("gather", cost=_cost_attn_gather,
+                   supports=lambda p: p.paged)
+register_attn_path("fused", cost=_cost_attn_fused,
+                   supports=lambda p: p.paged)
+
+
+def _attn_plan_for(problem: AttentionProblem, name: str) -> AttentionPlan:
+    parts = 1
+    if name == "fused":
+        parts = choose_kv_partitions(problem.B, problem.Hkv, problem.pages)
+    return AttentionPlan(path=name, kv_partitions=parts)
+
+
+def plan_attention(problem: AttentionProblem, *,
+                   path: Optional[str] = None) -> AttentionPlan:
+    """Choose the decode-attention path for ``problem``.
+
+    With ``path=None`` every registered path that supports the problem is
+    ranked by its roofline cost and the cheapest wins — on TPU that is the
+    fused kernel for paged long-context decode (one trip over the KV pool);
+    on CPU hosts the interpret penalty keeps the XLA gather in front. A
+    named ``path`` forces the choice but is validated against supports()
+    so e.g. "ring" on a paged engine fails loudly.
+    """
+    if path is not None:
+        if path == "auto":
+            return plan_attention(problem)
+        entry = _ATTN_REGISTRY.get(path)
+        if entry is None:
+            raise ValueError(
+                f"unknown attention path {path!r} (registered: "
+                f"{list(available_attn_paths())})")
+        if not entry.supports(problem):
+            eligible = [e.name for e in _ATTN_REGISTRY.values()
+                        if e.supports(problem)]
+            raise ValueError(
+                f"attention path {path!r} does not support this problem "
+                f"(paged={problem.paged}); paths that do: {eligible}")
+        return _attn_plan_for(problem, path)
+
+    best: Optional[Tuple[float, int, AttentionPlan]] = None
+    for order, entry in enumerate(_ATTN_REGISTRY.values()):
+        if not entry.supports(problem):
+            continue
+        plan = _attn_plan_for(problem, entry.name)
+        score = entry.cost(problem, plan)
+        if best is None or (score, order) < (best[0], best[1]):
+            best = (score, order, plan)
+    if best is None:
+        raise ValueError(
+            f"no registered attention path supports this problem "
+            f"(paged={problem.paged}; registered: "
+            f"{list(available_attn_paths())})")
+    return best[2]

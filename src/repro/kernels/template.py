@@ -55,6 +55,7 @@ __all__ = [
     "BlockConfig", "choose_blocks", "tiled_matmul",
     "DenseWeight", "GroupedInt4Dequant", "ChannelInt8Dequant",
     "GroupedInt4Raw", "FloatContraction", "Int8GroupContraction",
+    "DensePages", "Int8ChannelPages",
 ]
 
 
@@ -252,6 +253,77 @@ class GroupedInt4Raw:
         p_ref, s_ref, *z = refs
         return (common.unpack_int4_block(p_ref), s_ref,
                 z[0] if z else None)
+
+
+# ---------------------------------------------------------------------------
+# KV stages (the stage vocabulary extended from GEMM to attention).
+#
+# A KVStage is the attention analogue of a WeightStage: it declares the
+# paged-pool operands the fused decode kernel walks (runtime/kvcache.py
+# block pools, one physical page per grid step), how each operand is
+# blocked, and how the in-VMEM (page_size, D) K/V tiles are produced —
+# identity load for ``kv_fp16`` pages, per-(token, head) INT8 dequant for
+# ``kv8_channel`` (the same AIV dequant role the GEMM weight stages play,
+# fused into the consumer instead of round-tripping through HBM).
+#
+# ``block_shapes`` distinguishes operand kinds by rank: 4-d blocks
+# ``(1, ps, 1, D)`` are payload pools indexed ``(page, 0, head, 0)``;
+# 3-d blocks ``(1, ps, 1)`` are scale pools indexed ``(page, 0, head)``.
+# The emitter (kernels/paged_attention.py) turns those into block-table
+# index maps over the scalar-prefetched tables.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DensePages:
+    """Identity KV stage: pool pages already hold the cache dtype
+    (``kv_fp16`` — no scales, no dequant)."""
+
+    k_pool: jax.Array                 # (num_blocks, ps, Hkv, D)
+    v_pool: jax.Array
+
+    def operands(self) -> List[jax.Array]:
+        return [self.k_pool, self.v_pool]
+
+    def block_shapes(self, ps: int, D: int) -> List[Tuple[int, ...]]:
+        return [(1, ps, 1, D), (1, ps, 1, D)]
+
+    def produce(self, refs: Sequence, compute_dtype):
+        k_ref, v_ref = refs
+        return (k_ref[0, :, 0, :].astype(compute_dtype),
+                v_ref[0, :, 0, :].astype(compute_dtype))
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8ChannelPages:
+    """Per-(token, head) INT8 KV dequant in VMEM (``kv8_channel``).
+
+    Matches ``core/quant.kv_dequantize`` bit-for-bit: fp32 payload × fp32
+    scale, cast to the cache compute dtype — the dequantized page never
+    exists outside VMEM (vs. the gather path, which materializes the whole
+    dequantized window to HBM before attention reads it back).
+    """
+
+    k_pool: jax.Array                 # (num_blocks, ps, Hkv, D) int8
+    v_pool: jax.Array
+    k_scale: jax.Array                # (num_blocks, ps, Hkv) fp32
+    v_scale: jax.Array
+
+    def operands(self) -> List[jax.Array]:
+        return [self.k_pool, self.v_pool, self.k_scale, self.v_scale]
+
+    def block_shapes(self, ps: int, D: int) -> List[Tuple[int, ...]]:
+        return [(1, ps, 1, D), (1, ps, 1, D), (1, ps, 1), (1, ps, 1)]
+
+    def produce(self, refs: Sequence, compute_dtype):
+        k_ref, v_ref, ks_ref, vs_ref = refs
+
+        def deq(p_ref, s_ref):
+            q = p_ref[0, :, 0, :].astype(jnp.float32)       # (ps, D)
+            s = s_ref[0, :, 0].astype(jnp.float32)          # (ps,)
+            return (q * s[:, None]).astype(compute_dtype)
+
+        return deq(k_ref, ks_ref), deq(v_ref, vs_ref)
 
 
 # ---------------------------------------------------------------------------

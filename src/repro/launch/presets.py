@@ -62,6 +62,10 @@ class ServeSettings:
     it get 429 — `runtime/frontdoor.py`) and ``deadline_s`` is the default
     per-request SLO applied when a client sends none (None = no deadline;
     an expired deadline is dropped with 408 before prefill).
+
+    ``attn_path`` picks the paged decode-attention path (``auto`` lets
+    ``kernels/planning.plan_attention`` rank gather vs fused per backend;
+    a named path is validated against the engine mode).
     """
 
     page_size: int = 16
@@ -71,6 +75,7 @@ class ServeSettings:
     spec_k: int = 4
     queue_depth: int = 64
     deadline_s: Optional[float] = None
+    attn_path: str = "auto"
 
 
 SERVE_PRESETS = {

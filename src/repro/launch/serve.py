@@ -184,6 +184,12 @@ def main(argv=None):
                     help="KV-cache block format (see repro.core.quant."
                          "available_kv_formats(): kv_fp16 | kv8_channel); "
                          "default: the arch preset")
+    ap.add_argument("--attn-path", default=None,
+                    choices=["auto", "gather", "fused"],
+                    help="paged decode-attention path: gather (XLA window "
+                         "reassembly) | fused (Pallas in-kernel block-table "
+                         "walk) | auto (planner ranks them per backend; "
+                         "default: the arch preset, usually auto)")
     ap.add_argument("--speculate", default=None,
                     help="speculative decoding proposer: off | ngram"
                          "[:max_n] | draft:layers=N (see repro.runtime."
@@ -266,12 +272,13 @@ def main(argv=None):
     proposer = None
     if speculate is not None:
         proposer = speculative.make_proposer(speculate, target_cfg=cfg)
+    attn_path = args.attn_path or sset.attn_path
     engine = ServingEngine(cfg, params, mesh=mesh, max_batch=B,
                            max_prompt_len=P, max_new_tokens=G,
                            refine_plans=args.refine_plans, paged=paged,
                            page_size=page_size, prefill_chunk=prefill_chunk,
                            kv_format=kv_format, speculate=proposer,
-                           spec_k=spec_k)
+                           spec_k=spec_k, attn_path=attn_path)
     print(f"[serve] engine: {B} slots, cache_len {engine.cache_len} "
           f"(prompt {P} + prefix {cfg.vision_prefix or 0} + gen {G})")
     if proposer is not None:
@@ -282,6 +289,10 @@ def main(argv=None):
               f"{engine.page_size} tokens ({engine.pages_slot}/slot), "
               f"kv_format {engine.kv_format}, prefill_chunk "
               f"{engine.prefill_chunk or 'whole-prompt'}")
+        print(f"[serve] attn path: {engine.attn_path}"
+              + (f" (kv_partitions={engine.kv_partitions})"
+                 if engine.attn_path == "fused" else "")
+              + ("" if args.attn_path else " [planned]"))
     for lk, plan in sorted(engine.plans.items()):
         print(f"[serve]   plan {lk}: {plan.strategy} "
               f"split_k={plan.split_k} "

@@ -369,15 +369,18 @@ def prefill(params, cfg: ModelConfig, tokens, *, cache_len: int,
 
 def decode_step(params, cfg: ModelConfig, state, tokens: jax.Array,
                 pos: jax.Array, *, tables=None, cache_len: int = 0,
-                kv_format: str = DEFAULT_KV_FORMAT):
+                kv_format: str = DEFAULT_KV_FORMAT,
+                attn_path: str = "gather"):
     """One decode step. tokens: (B,) int32; pos: (B,) absolute positions.
 
     state: {"cache": stacked per-layer cache, ["enc_kv": ...]} from prefill.
     With ``tables`` (B, pages_per_slot) the KV entries of ``state`` are
-    paged block pools (``kvcache.PagedKVCache``): each slot's logical ring
-    window is reassembled by gathering its block table, the new token is
-    scattered at ``pos % cache_len``, and the attention math/masking is
-    the unchanged ring path. Returns (logits (B, V) fp32, new state).
+    paged block pools (``kvcache.PagedKVCache``): the new token is
+    scattered at ``pos % cache_len`` and attention runs on ``attn_path`` —
+    ``"gather"`` reassembles each slot's ring window then runs the
+    unchanged ring attention; ``"fused"`` walks the block table inside the
+    Pallas kernel (one pass, token-identical). Returns (logits (B, V)
+    fp32, new state).
     """
     h = layers.embed(params["embed"], tokens)            # (B, d)
     B = h.shape[0]
@@ -402,7 +405,7 @@ def decode_step(params, cfg: ModelConfig, state, tokens: jax.Array,
                                        cache_len=cache_len, fmt=kvfmt)
             o = kvc.paged_decode_attention(
                 q, kvcache, tables, pos, window=cfg.sliding_window,
-                fmt=kvfmt, out_dtype=cfg.dtype)
+                fmt=kvfmt, out_dtype=cfg.dtype, attn_path=attn_path)
         return layers.linear(lp["wo"], o.reshape(B, H * D), cfg), kvcache
 
     def body(h, xs):

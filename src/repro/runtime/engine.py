@@ -245,7 +245,8 @@ class ServingEngine:
                  kv_format: Optional[str] = None,
                  num_pages: Optional[int] = None,
                  speculate=None, spec_k: int = 4,
-                 admission: str = "fifo"):
+                 admission: str = "fifo",
+                 attn_path: str = "auto"):
         self.mesh = mesh
         if admission not in ("fifo", "priority"):
             raise ValueError(f"admission must be 'fifo' or 'priority', "
@@ -300,6 +301,23 @@ class ServingEngine:
                                               self.cache_len)))
         self._chunkable = (self.paged and self.prefill_chunk is not None
                            and cfg.family in T.CHUNKABLE_FAMILIES)
+
+        # decode-attention path: a costed plan decision, same shape as the
+        # matmul planner — "auto" ranks ring/gather/fused on the engine's
+        # true decode problem (gather on CPU hosts, fused on TPU for long
+        # contexts); a forced path is validated against the engine mode
+        # (e.g. "fused" without the paged cache is refused loudly)
+        attn_problem = planning.AttentionProblem(
+            B=self.max_batch, Hq=cfg.num_heads, Hkv=cfg.num_kv_heads,
+            D=cfg.head_dim, cache_len=self.cache_len,
+            page_size=self.page_size, window=cfg.sliding_window,
+            kv_format=self.kv_format, paged=self.paged,
+            backend=jax.default_backend(),
+            act_bytes=jnp.dtype(cfg.dtype).itemsize)
+        attn_plan = planning.plan_attention(
+            attn_problem, path=None if attn_path == "auto" else attn_path)
+        self.attn_path = attn_plan.path
+        self.kv_partitions = attn_plan.kv_partitions
 
         self.spec_k = int(spec_k)
         self.proposer: Optional[spec.Proposer] = None
@@ -425,7 +443,8 @@ class ServingEngine:
 
     def _serve_step(self):
         if self._serve_fn is None:
-            kw = dict(cache_len=self.cache_len, kv_format=self.kv_format)
+            kw = dict(cache_len=self.cache_len, kv_format=self.kv_format,
+                      attn_path=self.attn_path)
             if self.mesh is None:
                 self._serve_fn = jax.jit(
                     rsteps.make_serve_step(self.cfg, **kw))
@@ -1020,6 +1039,13 @@ class ServingEngine:
         if self.paged:
             m.gauge("engine_pages_in_use",
                     "live KV blocks").set(self.alloc.pages_in_use)
+        # which decode-attention path served this step (planner outcome,
+        # surfaced on GET /metrics): 0=ring, 1=gather, 2=fused
+        m.gauge("engine_attn_path",
+                "decode attention path (0=ring 1=gather 2=fused)").set(
+            {"ring": 0, "gather": 1, "fused": 2}.get(self.attn_path, -1))
+        m.counter(f"engine_attn_path_steps_{self.attn_path}",
+                  "scheduler steps served by this attention path").inc()
         if self.proposer is not None and self.report is not None:
             m.gauge("engine_acceptance_rate",
                     "accepted/proposed draft tokens").set(

@@ -139,6 +139,15 @@ def gather_window(pool: PagedKVCache, tables: jax.Array, *,
         g = jnp.take(leaf, bt.reshape(-1), axis=0)         # (B*T, ps, ...)
         return g.reshape(B, T * ps, *leaf.shape[2:])
 
+    if not fmt.quantized:
+        # passthrough formats store the cache dtype directly: no dequant
+        # pass, and no scale pools to gather (they are None anyway)
+        k = take(pool.k_pool)
+        v = take(pool.v_pool)
+        if k.dtype != jnp.dtype(out_dtype):
+            k = k.astype(out_dtype)
+            v = v.astype(out_dtype)
+        return attention.KVCache(k=k, v=v, pos=take(pool.page_pos))
     k = kv_dequantize(take(pool.k_pool),
                       None if pool.k_scale is None else take(pool.k_scale),
                       fmt, out_dtype)
@@ -287,10 +296,31 @@ def scatter_ring(pool: PagedKVCache, table: np.ndarray,
 
 def paged_decode_attention(q: jax.Array, pool: PagedKVCache,
                            tables: jax.Array, pos: jax.Array, *,
-                           window: int = 0, fmt: KVFormat,
-                           out_dtype) -> jax.Array:
-    """Decode attention over the paged pool: gather the slot windows, then
-    run the unchanged ring-cache attention (same masking, same dots)."""
+                           window: int = 0, fmt: KVFormat, out_dtype,
+                           attn_path: str = "gather",
+                           kv_partitions=None,
+                           interpret=None) -> jax.Array:
+    """Decode attention over the paged pool, on the planned path.
+
+    ``"gather"`` reassembles the slot windows to HBM and runs the
+    unchanged ring-cache attention (same masking, same dots) — two passes
+    over the KV working set. ``"fused"`` walks the block table inside the
+    Pallas kernel (``kernels/paged_attention.py``): pages stream through
+    VMEM, `kv8_channel` dequant and online softmax fuse into one pass.
+    Both are token-identical; ``planning.plan_attention`` picks per
+    backend (gather on CPU, fused on TPU for long contexts).
+    """
+    if attn_path == "fused":
+        from repro.kernels.paged_attention import fused_paged_attention
+
+        return fused_paged_attention(
+            q, pool, tables, pos, window=window, fmt=fmt,
+            out_dtype=out_dtype, kv_partitions=kv_partitions,
+            interpret=interpret)
+    if attn_path != "gather":
+        raise ValueError(
+            f"unknown attn_path {attn_path!r} for paged decode (expected "
+            f"gather | fused; 'ring' is the non-paged engine's path)")
     cache = gather_window(pool, tables, fmt=fmt, out_dtype=out_dtype)
     return attention.decode_attention(q, cache, pos, window=window)
 

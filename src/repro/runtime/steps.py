@@ -118,16 +118,18 @@ def make_prefill_step(cfg: ModelConfig, cache_len: int):
 
 
 def make_serve_step(cfg: ModelConfig, *, cache_len: int = 0,
-                    kv_format: str = "kv_fp16"):
+                    kv_format: str = "kv_fp16",
+                    attn_path: str = "gather"):
     """serve_step(params, inputs={state, tokens, pos, [tables]}) — one
     decode step. When ``inputs`` carries per-slot block ``tables`` the KV
-    state is the paged pool and ``cache_len``/``kv_format`` select the
-    slot-window length and KV storage format (see runtime/kvcache.py)."""
+    state is the paged pool, ``cache_len``/``kv_format`` select the
+    slot-window length and KV storage format, and ``attn_path`` the
+    planned decode-attention path (see runtime/kvcache.py)."""
     def serve_step(params, inputs):
         logits, state = T.decode_step(
             params, cfg, inputs["state"], inputs["tokens"], inputs["pos"],
             tables=inputs.get("tables"), cache_len=cache_len,
-            kv_format=kv_format)
+            kv_format=kv_format, attn_path=attn_path)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return {"next": next_tok, "logits": logits, "state": state}
     return serve_step
@@ -245,8 +247,9 @@ def jit_prefill_step(cfg, mesh, cache_len: int, params_abstract,
 
 def jit_serve_step(cfg, mesh, params_abstract, inputs_abstract, *,
                    fsdp_serve=False, cache_len: int = 0,
-                   kv_format: str = "kv_fp16"):
-    fn = make_serve_step(cfg, cache_len=cache_len, kv_format=kv_format)
+                   kv_format: str = "kv_fp16", attn_path: str = "gather"):
+    fn = make_serve_step(cfg, cache_len=cache_len, kv_format=kv_format,
+                         attn_path=attn_path)
     pshard = shd.param_shardings(params_abstract, mesh, fsdp=fsdp_serve)
     ishard = serve_input_shardings(inputs_abstract, cfg, mesh)
     B = inputs_abstract["tokens"].shape[0]

@@ -1,0 +1,387 @@
+"""Fused paged-attention decode kernel tests: op-level parity with the
+XLA gather path (both KV formats, windowed and full attention, every
+Split-K partition degree), the gather_window fp16 fast path, the
+attention-path planner, and engine-level token parity across SWA-wrap /
+vision-prefix / shared-prefix-CoW archs — single-device and TP×DP on 8
+fake devices (subprocess)."""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import quant
+from repro.kernels import common, planning
+from repro.kernels.paged_attention import fused_paged_attention, kv_stage_for
+from repro.kernels import template
+from repro.models import transformer as T
+from repro.runtime import kvcache as kvc
+from repro.runtime import metrics as rmetrics
+from repro.runtime.engine import Request, ServingEngine
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# op-level parity: fused kernel ≡ gather + decode_attention
+# ---------------------------------------------------------------------------
+
+def _filled_pool(fmt_name, *, B=2, Hkv=2, D=32, ps=4, T_pages=4, fill=14,
+                 wrap_from=0):
+    """A pool with ``fill`` tokens scattered per slot through the public
+    insert path. ``wrap_from > 0`` writes positions [wrap_from, wrap_from +
+    fill) into a T_pages·ps ring — the SWA wrap layout where logical
+    offsets alias ``pos % cache_len``."""
+    fmt = quant.get_kv_format(fmt_name)
+    nb = 1 + B * T_pages
+    cache_len = T_pages * ps
+    pool = kvc.init_pool(nb, ps, Hkv, D, jnp.float32, fmt_name)
+    tables = jnp.asarray(
+        (1 + np.arange(B * T_pages, dtype=np.int32)).reshape(B, T_pages))
+    for p in range(wrap_from, wrap_from + fill):
+        k = jax.random.normal(jax.random.fold_in(KEY, 2 * p),
+                              (B, Hkv, D), jnp.float32)
+        v = jax.random.normal(jax.random.fold_in(KEY, 2 * p + 1),
+                              (B, Hkv, D), jnp.float32)
+        pool = kvc.paged_insert(pool, tables, k, v,
+                                jnp.full((B,), p, jnp.int32),
+                                cache_len=cache_len, fmt=fmt)
+    pos = jnp.full((B,), wrap_from + fill - 1, jnp.int32)
+    q = jax.random.normal(jax.random.fold_in(KEY, 999),
+                          (B, 2 * Hkv, D), jnp.float32)
+    return q, pool, tables, pos, fmt
+
+
+@pytest.mark.parametrize("fmt_name", ["kv_fp16", "kv8_channel"])
+@pytest.mark.parametrize("window", [0, 8])
+@pytest.mark.parametrize("parts", [1, 2, 4])
+def test_fused_matches_gather(fmt_name, window, parts):
+    q, pool, tables, pos, fmt = _filled_pool(fmt_name)
+    ref = kvc.paged_decode_attention(q, pool, tables, pos, window=window,
+                                     fmt=fmt, out_dtype=jnp.float32)
+    out = fused_paged_attention(q, pool, tables, pos, window=window,
+                                fmt=fmt, out_dtype=jnp.float32,
+                                kv_partitions=parts)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_fused_matches_gather_wrapped_ring():
+    """SWA wrap: positions past cache_len alias earlier ring offsets, so
+    pages hold out-of-order position tags — masking must follow the tags,
+    not the page order."""
+    q, pool, tables, pos, fmt = _filled_pool("kv_fp16", wrap_from=9)
+    for window in (0, 8):
+        ref = kvc.paged_decode_attention(q, pool, tables, pos,
+                                         window=window, fmt=fmt,
+                                         out_dtype=jnp.float32)
+        out = fused_paged_attention(q, pool, tables, pos, window=window,
+                                    fmt=fmt, out_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-6)
+
+
+def test_fused_unmapped_tables_mask_to_null_block():
+    """-1 table entries resolve to the null block (all -1 tags): parity
+    holds when slots hold windows of different lengths."""
+    q, pool, tables, pos, fmt = _filled_pool("kv8_channel", fill=6)
+    tables = tables.at[1, 2:].set(-1)      # slot 1: half the table unmapped
+    ref = kvc.paged_decode_attention(q, pool, tables, pos, fmt=fmt,
+                                     out_dtype=jnp.float32)
+    out = fused_paged_attention(q, pool, tables, pos, fmt=fmt,
+                                out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_fused_partition_count_validation():
+    q, pool, tables, pos, fmt = _filled_pool("kv_fp16")   # T=4 pages
+    with pytest.raises(ValueError, match="must divide"):
+        fused_paged_attention(q, pool, tables, pos, fmt=fmt,
+                              out_dtype=jnp.float32, kv_partitions=3)
+
+
+def test_fused_interpret_toggle():
+    """The CPU-CI fallback: interpret=None resolves per-backend (True on
+    CPU), and forcing interpret=True gives the same tokens — the toggle
+    the parity suite rides."""
+    assert common.resolve_interpret(None) is common.is_cpu()
+    q, pool, tables, pos, fmt = _filled_pool("kv_fp16")
+    auto = fused_paged_attention(q, pool, tables, pos, fmt=fmt,
+                                 out_dtype=jnp.float32)
+    forced = fused_paged_attention(q, pool, tables, pos, fmt=fmt,
+                                   out_dtype=jnp.float32, interpret=True)
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(forced))
+
+
+def test_kv_stage_selection_and_refusal():
+    _, pool, _, _, _ = _filled_pool("kv_fp16")
+    assert isinstance(kv_stage_for(pool, quant.get_kv_format("kv_fp16")),
+                      template.DensePages)
+    _, qpool, _, _, _ = _filled_pool("kv8_channel")
+    assert isinstance(kv_stage_for(qpool, quant.get_kv_format("kv8_channel")),
+                      template.Int8ChannelPages)
+    # a quantized format over a scale-less pool is refused loudly
+    with pytest.raises(ValueError, match="scales"):
+        kv_stage_for(pool, quant.get_kv_format("kv8_channel"))
+
+
+# ---------------------------------------------------------------------------
+# gather_window fp16 fast path (satellite)
+# ---------------------------------------------------------------------------
+
+def test_gather_window_fp16_skips_dequant(monkeypatch):
+    """Passthrough pools must not route through kv_dequantize (no dequant
+    pass, no scale gathers) — the pre-fix behavior cost an extra pool-sized
+    elementwise pass per decode step."""
+    q, pool, tables, pos, fmt = _filled_pool("kv_fp16")
+    want = kvc.gather_window(pool, tables, fmt=fmt, out_dtype=jnp.float32)
+
+    def boom(*a, **k):
+        raise AssertionError("kv_dequantize called for a passthrough format")
+
+    monkeypatch.setattr(kvc, "kv_dequantize", boom)
+    got = kvc.gather_window(pool, tables, fmt=fmt, out_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(got.k), np.asarray(want.k))
+    np.testing.assert_array_equal(np.asarray(got.pos), np.asarray(want.pos))
+    # quantized pools still dequantize
+    q2, qpool, t2, p2, qfmt = _filled_pool("kv8_channel")
+    with pytest.raises(AssertionError, match="passthrough"):
+        kvc.gather_window(qpool, t2, fmt=qfmt, out_dtype=jnp.float32)
+
+
+def test_gather_window_fp16_dtype_cast():
+    q, pool, tables, pos, fmt = _filled_pool("kv_fp16")
+    win = kvc.gather_window(pool, tables, fmt=fmt, out_dtype=jnp.bfloat16)
+    assert win.k.dtype == jnp.bfloat16 and win.v.dtype == jnp.bfloat16
+
+
+def test_paged_decode_attention_rejects_unknown_path():
+    q, pool, tables, pos, fmt = _filled_pool("kv_fp16")
+    with pytest.raises(ValueError, match="unknown attn_path"):
+        kvc.paged_decode_attention(q, pool, tables, pos, fmt=fmt,
+                                   out_dtype=jnp.float32, attn_path="ring")
+
+
+# ---------------------------------------------------------------------------
+# planner: ring vs gather vs fused as a costed decision
+# ---------------------------------------------------------------------------
+
+def _problem(**kw):
+    base = dict(B=4, Hq=32, Hkv=8, D=128, cache_len=4096, page_size=16,
+                kv_format="kv8_channel", paged=True, backend="tpu")
+    base.update(kw)
+    return planning.AttentionProblem(**base)
+
+
+def test_plan_attention_backend_split():
+    """The acceptance decision: fused wins on TPU for long-context paged
+    decode (one trip over the pool); the interpret penalty keeps the XLA
+    gather in front on CPU hosts."""
+    assert planning.plan_attention(_problem()).path == "fused"
+    assert planning.plan_attention(_problem(kv_format="kv_fp16")).path \
+        == "fused"
+    assert planning.plan_attention(_problem(backend="cpu")).path == "gather"
+    # non-paged engines only have the ring layout
+    assert planning.plan_attention(
+        _problem(paged=False, kv_format="kv_fp16")).path == "ring"
+
+
+def test_plan_attention_costs_charge_gather_roundtrip():
+    """The roofline entries price the gather's HBM round-trip: on TPU the
+    gather path is strictly more bytes (and time) than fused for the same
+    problem, and the gap grows with context."""
+    from repro.core import costmodel as cm
+    for ctx in (1024, 4096, 16384):
+        gb = cm.paged_attn_bytes("gather", 4, 32, 8, 128, ctx,
+                                 quantized=True)
+        fb = cm.paged_attn_bytes("fused", 4, 32, 8, 128, ctx,
+                                 quantized=True, kv_partitions=8)
+        assert fb < gb
+        assert cm.attn_decode_time_tpu("fused", 4, 32, 8, 128, ctx,
+                                       quantized=True, kv_partitions=8) < \
+            cm.attn_decode_time_tpu("gather", 4, 32, 8, 128, ctx,
+                                    quantized=True)
+
+
+def test_plan_attention_forced_path_validation():
+    with pytest.raises(ValueError, match="unknown attention path"):
+        planning.plan_attention(_problem(), path="flash3")
+    with pytest.raises(ValueError, match="does not support"):
+        planning.plan_attention(_problem(), path="ring")      # paged
+    with pytest.raises(ValueError, match="does not support"):
+        planning.plan_attention(_problem(paged=False), path="fused")
+    plan = planning.plan_attention(_problem(backend="cpu"), path="fused")
+    assert plan.path == "fused"            # forcing beats the cost ranking
+
+
+def test_choose_kv_partitions_occupancy():
+    cores = planning.num_cores()
+    # grid already full → no split
+    assert planning.choose_kv_partitions(cores, 1, 64) == 1
+    # underfilled grid → split up to the core count, power-of-2 divisor
+    s = planning.choose_kv_partitions(1, 1, 64)
+    assert s >= 1 and 64 % s == 0 and (s & (s - 1)) == 0
+    if cores >= 2:
+        assert s > 1
+    # never more partitions than pages
+    assert planning.choose_kv_partitions(1, 1, 1) == 1
+
+
+# ---------------------------------------------------------------------------
+# engine-level token parity: fused ≡ gather across archs × formats
+# ---------------------------------------------------------------------------
+
+def _params(cfg, quantized=True):
+    p = T.init_params(KEY, cfg)
+    return T.quantize_params(p, cfg, min_size=0) if quantized else p
+
+
+def _requests(cfg, n, P, G, *, same_prompt=False):
+    toks = jax.random.randint(KEY, (n, P), 0, cfg.vocab_size)
+    reqs = []
+    for i in range(n):
+        kw = {}
+        if cfg.vision_prefix:
+            kw["prefix_embeds"] = jax.random.normal(
+                jax.random.fold_in(KEY, 0 if same_prompt else i),
+                (cfg.vision_prefix, cfg.d_model), cfg.dtype)
+        reqs.append(Request(rid=i, prompt=toks[0] if same_prompt else toks[i],
+                            max_new_tokens=G, **kw))
+    return reqs
+
+
+@pytest.mark.parametrize("arch", ["h2o-danube-1.8b", "internvl2-1b"])
+@pytest.mark.parametrize("kv_format", ["kv_fp16", "kv8_channel"])
+def test_fused_engine_parity(arch, kv_format):
+    """Fused-paged decode is token-identical to gather decode on the SWA
+    (ring-wrap) and vision-prefix archs, both KV formats — the tentpole
+    acceptance. Prompts run past the danube window so pages wrap."""
+    cfg = dataclasses.replace(configs.get_reduced(arch),
+                              w4a16_strategy="xla")
+    P, G, n = 12, 6, 2
+    params = _params(cfg)
+
+    def run(path):
+        eng = ServingEngine(cfg, params, max_batch=n, max_prompt_len=P,
+                            max_new_tokens=G, page_size=4,
+                            kv_format=kv_format, attn_path=path)
+        assert eng.attn_path == path
+        return eng.run(_requests(cfg, n, P, G)).results
+
+    got, want = run("fused"), run("gather")
+    assert got == want and sorted(got) == list(range(n))
+
+
+def test_fused_engine_parity_shared_prefix_cow():
+    """Shared-prefix CoW arch case: identical prompts alias prompt pages
+    until the divergent decode write copies them — the fused walk reads
+    the exact same physical pages the gather path does."""
+    cfg = dataclasses.replace(configs.get_reduced("internvl2-1b"),
+                              w4a16_strategy="xla")
+    P, G, n = 8, 4, 2
+    params = _params(cfg)
+
+    def run(path):
+        eng = ServingEngine(cfg, params, max_batch=n, max_prompt_len=P,
+                            max_new_tokens=G, page_size=4, attn_path=path)
+        rep = eng.run(_requests(cfg, n, P, G, same_prompt=True))
+        return rep.results, rep.peak_pages
+
+    got, pages_f = run("fused")
+    want, pages_g = run("gather")
+    assert got == want
+    assert got[0] == got[1]                 # same prompt → same greedy run
+    assert pages_f == pages_g               # identical allocator behavior
+
+
+def test_engine_attn_path_resolution_and_metrics():
+    """auto resolves per backend (gather on CPU CI), the resolved path is
+    exported as a /metrics gauge + per-path step counter, and fused on a
+    non-paged engine is refused loudly."""
+    cfg = dataclasses.replace(configs.get_reduced("h2o-danube-1.8b"),
+                              w4a16_strategy="xla")
+    params = _params(cfg)
+    eng = ServingEngine(cfg, params, max_batch=2, max_prompt_len=8,
+                        max_new_tokens=3, page_size=4)
+    assert eng.attn_path == ("fused" if jax.default_backend() == "tpu"
+                             else "gather")
+    eng.metrics = rmetrics.MetricsRegistry()
+    eng.run(_requests(cfg, 2, 8, 3))
+    text = eng.metrics.render()
+    assert f"engine_attn_path {float(1 if eng.attn_path == 'gather' else 2)}" \
+        in text.replace(".0", "") or "engine_attn_path" in text
+    assert f"engine_attn_path_steps_{eng.attn_path}" in text
+    with pytest.raises(ValueError, match="does not support"):
+        ServingEngine(cfg, params, max_batch=2, max_prompt_len=8,
+                      max_new_tokens=3, paged=False, attn_path="fused")
+    ring = ServingEngine(cfg, params, max_batch=2, max_prompt_len=8,
+                         max_new_tokens=3, paged=False)
+    assert ring.attn_path == "ring"
+
+
+# ---------------------------------------------------------------------------
+# multi-device parity (subprocess with 8 fake CPU devices)
+# ---------------------------------------------------------------------------
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+
+from repro import configs
+from repro.kernels import planning
+from repro.launch.mesh import make_local_mesh
+from repro.models import transformer as T
+from repro.runtime.engine import Request, ServingEngine
+
+out = {}
+P, G, R, SLOTS = 8, 4, 2, 2
+arch = "h2o-danube-1.8b"
+cfg = configs.get_reduced(arch)
+key = jax.random.PRNGKey(0)
+params = T.quantize_params(T.init_params(key, cfg), cfg, min_size=0)
+toks = jax.random.randint(key, (R, P), 0, cfg.vocab_size)
+
+
+def run_engine(mesh, attn_path):
+    planning.PLAN_CACHE.clear()
+    eng = ServingEngine(cfg, params, mesh=mesh, max_batch=SLOTS,
+                        max_prompt_len=P, max_new_tokens=G, page_size=4,
+                        attn_path=attn_path)
+    reqs = [Request(rid=i, prompt=toks[i], max_new_tokens=G)
+            for i in range(R)]
+    return {str(k): v for k, v in sorted(eng.run(reqs).results.items())}
+
+
+single_gather = run_engine(None, "gather")
+single_fused = run_engine(None, "fused")
+out["single/fused==gather"] = single_fused == single_gather
+mesh = make_local_mesh(data=2, model=4)
+sharded_fused = run_engine(mesh, "fused")
+out["tp4xdp2/fused==single"] = sharded_fused == single_gather
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_fused_engine_parity():
+    """Forced-fused decode on a TP=4 x DP=2 mesh (8 fake CPU devices) is
+    token-identical to single-device gather decode."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    res = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert res.returncode == 0, res.stderr[-3000:]
+    line = [l for l in res.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+    assert out and all(out.values()), {k: v for k, v in out.items() if not v}
