@@ -648,6 +648,86 @@ def bench_frontdoor(out_path: str = "BENCH_frontdoor.json") -> dict:
     return blob
 
 
+# ---------------------------------------------------------------------------
+# Warm-prefix-cache sweep: Zipf-distributed prompt reuse against the
+# allocator's warm retention budget — warm hit rate and prefill steps saved
+# per (skew, budget) cell, persisted as BENCH_prefix_cache.json (CI artifact)
+# ---------------------------------------------------------------------------
+
+def bench_prefix_cache(out_path: str = "BENCH_prefix_cache.json") -> dict:
+    """Zipfian arrival-trace sweep over the warm prefix cache: R requests
+    draw their prompt from a pool of U distinct page-aligned prompts with
+    Zipf(skew) popularity, so hot prompts return after their slot has
+    released its pages. Each skew level runs at three warm budgets (off /
+    half the pool / the whole pool + slack); warm hit rate and
+    prefill-steps-saved are the figures of merit — a full warm hit admits
+    with zero prefill steps."""
+    import dataclasses
+
+    from repro import configs
+    from repro.models import transformer as T
+    from repro.runtime.engine import Request, ServingEngine
+
+    print("# prefix_cache: name,us_per_call,derived(warm_hit_rate)")
+    # dense arch: an SWA window would wrap decode over the prompt pages
+    # and unpublish the very chains warm retention wants to keep
+    arch, P, G, B, R, U = "starcoder2-7b", 16, 4, 2, 12, 6
+    page = 4                                   # P/page = 4-page chains
+    cfg = dataclasses.replace(configs.get_reduced(arch),
+                              w4a16_strategy="xla",
+                              quant_format=BENCH_FORMAT)
+    key = jax.random.PRNGKey(0)
+    params = T.quantize_params(T.init_params(key, cfg), cfg, min_size=0)
+    pool = jax.random.randint(key, (U, P), 0, cfg.vocab_size)
+
+    def trace(skew):
+        # rank-r prompt drawn with probability ∝ 1/(r+1)^skew; B=2 slots
+        # over R=12 arrivals means hot prompts keep returning after their
+        # pages were released — exactly the regime warm retention targets
+        w = jnp.arange(1, U + 1, dtype=jnp.float32) ** -skew
+        picks = jax.random.choice(jax.random.fold_in(key, int(skew * 10)),
+                                  U, (R,), p=w / w.sum())
+        return [Request(rid=i, prompt=pool[int(picks[i])],
+                        max_new_tokens=G) for i in range(R)]
+
+    def engine_for(mb):
+        return ServingEngine(cfg, params, max_batch=B, max_prompt_len=P,
+                             max_new_tokens=G, page_size=page,
+                             prefill_chunk=page, warm_cache_mb=mb)
+
+    chain_mb = (engine_for(0.0).alloc.block_bytes
+                * (P // page)) / (1 << 20)     # one full prompt chain
+    cells = []
+    for skew in (0.0, 1.0, 1.8):
+        for budget_mb in (0.0, chain_mb * U / 2, chain_mb * (U + B)):
+            engine = engine_for(budget_mb)
+            engine.run(trace(skew))            # warm: compile + plans
+            report = engine.run(trace(skew))
+            admits = report.warm_hits + report.warm_misses
+            hit_rate = report.warm_hits / max(admits, 1)
+            name = (f"prefix_cache/{arch}/zipf{skew:.1f}/"
+                    f"warm{budget_mb:.2f}MiB")
+            print(f"{name},{report.decode_s*1e6:.0f},{hit_rate:.3f}")
+            cells.append({
+                "name": name, "arch": arch, "zipf_skew": skew,
+                "warm_cache_mb": round(budget_mb, 4), "batch": B,
+                "prompt_len": P, "gen": G, "requests": R,
+                "distinct_prompts": U, "page_size": page,
+                "warm_hits": report.warm_hits,
+                "warm_misses": report.warm_misses,
+                "warm_hit_rate": round(hit_rate, 4),
+                "prefill_steps_saved": report.prefill_steps_saved,
+                "steps": report.steps,
+                "tok_per_s": round(report.tokens_per_s, 3),
+            })
+    blob = {"format": BENCH_FORMAT, "backend": jax.default_backend(),
+            "cells": cells}
+    with open(out_path, "w") as f:
+        json.dump(blob, f, indent=1, sort_keys=True)
+    print(f"# prefix_cache: wrote {len(cells)} cells -> {out_path}")
+    return blob
+
+
 BENCHES = {
     "fig2": bench_fig2_splitk_vs_dataparallel,
     "fig3": bench_fig3_w4a16_vs_fp16,
@@ -660,6 +740,7 @@ BENCHES = {
     "paged_attn": bench_paged_attn,
     "speculative": bench_speculative,
     "frontdoor": bench_frontdoor,
+    "prefix_cache": bench_prefix_cache,
 }
 
 
@@ -671,11 +752,12 @@ def main(argv=None) -> None:
                     help="run the quick perf snapshot, the fused-format "
                          "sweep, the serving sweep, the ring-vs-paged KV "
                          "sweep, the paged-attention path sweep, the "
-                         "speculative sweep and the front-door arrival "
-                         "sweep, writing BENCH_quickstart.json, "
-                         "BENCH_formats.json, BENCH_serving.json, "
-                         "BENCH_paged_kv.json, BENCH_paged_attn.json, "
-                         "BENCH_speculative.json and BENCH_frontdoor.json "
+                         "speculative sweep, the front-door arrival "
+                         "sweep and the warm-prefix-cache sweep, writing "
+                         "BENCH_quickstart.json, BENCH_formats.json, "
+                         "BENCH_serving.json, BENCH_paged_kv.json, "
+                         "BENCH_paged_attn.json, BENCH_speculative.json, "
+                         "BENCH_frontdoor.json and BENCH_prefix_cache.json "
                          "(the CI artifacts)")
     ap.add_argument("--format", default=quant.DEFAULT_FORMAT,
                     help="QuantFormat name for quantized benches "
@@ -694,6 +776,7 @@ def main(argv=None) -> None:
         bench_paged_attn()
         bench_speculative()
         bench_frontdoor()
+        bench_prefix_cache()
         return
     for name in args.benches or list(BENCHES):
         if name not in BENCHES:

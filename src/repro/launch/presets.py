@@ -50,10 +50,12 @@ class ServeSettings:
 
     ``page_size`` trades table length against fragmentation (smaller pages
     → better prefix-sharing granularity, longer tables); ``prefill_chunk``
-    bounds how many prompt tokens one engine step may spend on prefill
-    (None = whole-prompt prefill — mandatory for recurrent/enc-dec
-    families, whose chunked state threading isn't implemented);
-    ``kv_format`` names a registered KV-cache format (core/quant.py).
+    bounds how many prompt tokens one engine step may spend on prefill —
+    chunked prefill is the single prefill path for every family (None =
+    the engine default of 32); ``kv_format`` names a registered KV-cache
+    format (core/quant.py). ``warm_cache_mb`` budgets the allocator's
+    warm prefix retention (0 = off): released page-aligned prefix chains
+    stay adoptable so a returning system prompt skips its prefill.
     ``speculate`` names a draft proposer (``runtime/speculative.py``
     registry: ``ngram`` | ``draft[:layers=N]``; None = off) and
     ``spec_k`` how many draft tokens each verify step scores.
@@ -70,6 +72,7 @@ class ServeSettings:
 
     page_size: int = 16
     prefill_chunk: Optional[int] = 32
+    warm_cache_mb: float = 0.0
     kv_format: str = "kv_fp16"
     speculate: Optional[str] = None
     spec_k: int = 4
@@ -85,10 +88,11 @@ SERVE_PRESETS = {
     "internvl2-1b": ServeSettings(page_size=8, prefill_chunk=32),
     # code serving sees heavy prompt/output repetition — free ngram wins
     "starcoder2-7b": ServeSettings(speculate="ngram"),
-    # recurrent / enc-dec: whole-prompt prefill (chunking unsupported)
-    "rwkv6-7b": ServeSettings(prefill_chunk=None),
-    "whisper-small": ServeSettings(prefill_chunk=None),
-    "hymba-1.5b": ServeSettings(prefill_chunk=None),
+    # recurrent / enc-dec: carries thread through the chunk step like
+    # everyone else; smaller chunks keep per-step scan work bounded
+    "rwkv6-7b": ServeSettings(prefill_chunk=32),
+    "whisper-small": ServeSettings(prefill_chunk=32),
+    "hymba-1.5b": ServeSettings(prefill_chunk=32),
     # 405B-class: big pages keep the block tables short at 32k contexts;
     # steps are expensive, so the admission queue is kept short — shed
     # load with a fast 429 instead of queueing past any realistic SLO

@@ -178,8 +178,14 @@ def main(argv=None):
                          "(default: the arch's ServeSettings preset)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunked prefill: max prompt tokens processed per "
-                         "engine step, interleaved with decode; 0 = whole-"
-                         "prompt prefill (default: the arch preset)")
+                         "engine step, interleaved with decode — the single "
+                         "prefill path for every family; 0 = the engine "
+                         "default of 32 (default: the arch preset)")
+    ap.add_argument("--warm-cache-mb", type=float, default=None,
+                    help="warm prefix retention budget in MiB: released "
+                         "page-aligned prefix chains stay adoptable and a "
+                         "returning prompt skips its prefill; 0 = off "
+                         "(default: the arch preset, usually 0)")
     ap.add_argument("--kv-format", default=None,
                     help="KV-cache block format (see repro.core.quant."
                          "available_kv_formats(): kv_fp16 | kv8_channel); "
@@ -236,6 +242,8 @@ def main(argv=None):
     page_size = args.page_size or sset.page_size
     prefill_chunk = sset.prefill_chunk if args.prefill_chunk is None \
         else (args.prefill_chunk or None)
+    warm_cache_mb = sset.warm_cache_mb if args.warm_cache_mb is None \
+        else args.warm_cache_mb
     fmt = quant.get_format(args.format or cfg.quant_format)
     kv_format = validate_kv_format(args.kv_format or sset.kv_format,
                                    fmt.name, paged=paged,
@@ -277,6 +285,7 @@ def main(argv=None):
                            max_prompt_len=P, max_new_tokens=G,
                            refine_plans=args.refine_plans, paged=paged,
                            page_size=page_size, prefill_chunk=prefill_chunk,
+                           warm_cache_mb=warm_cache_mb,
                            kv_format=kv_format, speculate=proposer,
                            spec_k=spec_k, attn_path=attn_path)
     print(f"[serve] engine: {B} slots, cache_len {engine.cache_len} "
@@ -288,7 +297,10 @@ def main(argv=None):
         print(f"[serve] paged KV: {engine.num_pages} blocks x "
               f"{engine.page_size} tokens ({engine.pages_slot}/slot), "
               f"kv_format {engine.kv_format}, prefill_chunk "
-              f"{engine.prefill_chunk or 'whole-prompt'}")
+              f"{engine.prefill_chunk}"
+              + (f", warm cache {warm_cache_mb:g} MiB"
+                 if engine.alloc is not None and engine.alloc.warm_bytes
+                 else ""))
         print(f"[serve] attn path: {engine.attn_path}"
               + (f" (kv_partitions={engine.kv_partitions})"
                  if engine.attn_path == "fused" else "")

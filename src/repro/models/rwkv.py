@@ -51,8 +51,19 @@ def _proj(p, x, cfg):
     return layers.linear(p, x, cfg)
 
 
-def time_mix_seq(p, x: jax.Array, state, *, num_heads: int, cfg=None):
-    """Sequence mode: x (B, S, d) → (B, S, d), scan over time."""
+def time_mix_seq(p, x: jax.Array, state, *, num_heads: int, cfg=None,
+                 valid=None, collect_states: bool = False):
+    """Sequence mode: x (B, S, d) → (B, S, d), scan over time.
+
+    ``valid`` (B, S) bool masks right-padded positions out of the carry:
+    a masked step leaves ``wkv`` untouched and the returned ``shift`` is
+    the last *valid* token (chunked prefill pads its final chunk; a row
+    with no valid token keeps its incoming shift).
+
+    With ``collect_states`` the per-step (post-mask) wkv states are also
+    returned as a third value, shape (B, S, H, hd, hd) — the verify step
+    uses them to checkpoint the carry at every draft position.
+    """
     B, S, d = x.shape
     H = num_heads
     hd = d // H
@@ -68,18 +79,31 @@ def time_mix_seq(p, x: jax.Array, state, *, num_heads: int, cfg=None):
     w = _heads(w, H)                             # (B, S, H, hd)
 
     def step(s, inp):
-        rt, kt, vt, wt = inp                     # (B,H,hd) each
-        s = s * wt[..., None] + kt[..., None] * vt[..., None, :]
+        rt, kt, vt, wt, mt = inp                 # (B,H,hd) ×4, (B,)
+        s_new = s * wt[..., None] + kt[..., None] * vt[..., None, :]
+        s = jnp.where(mt[:, None, None, None], s_new, s)
         # s: (B,H,hd_k,hd_v); o = r · S
-        o = jnp.einsum("bhk,bhkv->bhv", rt, s)
-        return s, o
+        o = jnp.einsum("bhk,bhkv->bhv", rt, s_new)
+        return s, (o, s) if collect_states else o
 
-    inps = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w))
-    s_fin, o = jax.lax.scan(step, state["wkv"], inps)
+    mask = jnp.ones((B, S), bool) if valid is None else valid
+    inps = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w)) + (
+        mask.transpose(1, 0),)
+    s_fin, ys = jax.lax.scan(step, state["wkv"], inps)
+    o = (ys[0] if collect_states else ys)
     o = o.transpose(1, 0, 2, 3).reshape(B, S, d)
     o = o * jax.nn.silu(g)
     out = _proj(p["tm_o"], o.astype(x.dtype), cfg)
-    new_state = dict(state, wkv=s_fin, shift=x[:, -1].astype(jnp.float32))
+    if valid is None:
+        shift_new = x[:, -1].astype(jnp.float32)
+    else:
+        last = jnp.maximum(jnp.sum(valid.astype(jnp.int32), 1) - 1, 0)
+        taken = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
+        shift_new = jnp.where(valid.any(1)[:, None],
+                              taken.astype(jnp.float32), state["shift"])
+    new_state = dict(state, wkv=s_fin, shift=shift_new)
+    if collect_states:
+        return out, new_state, ys[1].transpose(1, 0, 2, 3, 4)
     return out, new_state
 
 

@@ -45,21 +45,38 @@ def _gates(p, x, cfg):
     return u, B, C, dt, A
 
 
-def ssm_seq(p, x: jax.Array, state, cfg=None):
-    """x: (B, S, d_model) → (B, S, d_model), scan over time."""
+def ssm_seq(p, x: jax.Array, state, cfg=None, *, valid=None,
+            collect_states: bool = False):
+    """x: (B, S, d_model) → (B, S, d_model), scan over time.
+
+    ``valid`` (B, S) bool masks right-padded positions out of the carry:
+    a masked step leaves ``h`` untouched (its output row is garbage and
+    must not be consumed). Chunked prefill pads its final chunk to the
+    chunk width, so the returned ``h_fin`` must only see real tokens.
+
+    With ``collect_states`` the per-step (post-mask) carries are also
+    returned as a third value, shape (B, S, d_inner, n) — the verify
+    step uses them to checkpoint the carry at every draft position.
+    """
     u, Bm, Cm, dt, A = _gates(p, x, cfg)
+    if valid is None:
+        valid = jnp.ones(x.shape[:2], bool)
 
     def step(h, inp):
-        ut, bt, ct, dtt = inp                      # (B,d),(B,n),(B,n),(B,d)
+        ut, bt, ct, dtt, vt = inp                  # (B,d),(B,n),(B,n),(B,d),(B,)
         da = jnp.exp(dtt[..., None] * A)           # (B, d, n)
-        h = h * da + (dtt * ut)[..., None] * bt[:, None, :]
-        y = jnp.einsum("bdn,bn->bd", h, ct)
-        return h, y
+        h_new = h * da + (dtt * ut)[..., None] * bt[:, None, :]
+        h = jnp.where(vt[:, None, None], h_new, h)
+        y = jnp.einsum("bdn,bn->bd", h_new, ct)
+        return h, (y, h) if collect_states else y
 
-    inps = tuple(a.transpose(1, 0, 2) for a in (u, Bm, Cm, dt))
+    inps = tuple(a.transpose(1, 0, 2) for a in (u, Bm, Cm, dt)) + (
+        valid.transpose(1, 0),)
     h_fin, ys = jax.lax.scan(step, state, inps)
-    y = ys.transpose(1, 0, 2) + u * p["D"]
+    y = (ys[0] if collect_states else ys).transpose(1, 0, 2) + u * p["D"]
     out = layers.linear(p["out_proj"], y.astype(x.dtype), cfg)
+    if collect_states:
+        return out, h_fin, ys[1].transpose(1, 0, 2, 3)
     return out, h_fin
 
 

@@ -274,6 +274,27 @@ def _encoder_forward(params, cfg: ModelConfig, audio_embeds):
     return _norm(cfg, params["encoder"]["final_norm"], h)
 
 
+def encode_cross_kv(params, cfg: ModelConfig, audio_embeds):
+    """Encoder forward + per-decoder-layer cross-attention K/V.
+
+    audio_embeds: (B, T, d) → tuple of two (L, B, T, Hkv, D) stacks. The
+    serving engine calls this once at admit (the enc-dec analogue of a
+    recurrent family's carry init) and inserts the rows into the decode
+    state; training/``forward`` consumes it inline.
+    """
+    enc_out = _encoder_forward(params, cfg, audio_embeds)
+    B, T = enc_out.shape[:2]
+
+    def cross_kv(lp):
+        k = layers.linear(lp["cross"]["wk"], enc_out, cfg).reshape(
+            B, T, cfg.num_kv_heads, cfg.head_dim)
+        v = layers.linear(lp["cross"]["wv"], enc_out, cfg).reshape(
+            B, T, cfg.num_kv_heads, cfg.head_dim)
+        return (k, v)
+
+    return jax.vmap(cross_kv)(params["layers"])       # (L, B, T, Hkv, D) ×2
+
+
 # ---------------------------------------------------------------------------
 # public: forward (train) / loss
 # ---------------------------------------------------------------------------
@@ -296,18 +317,7 @@ def forward(params, cfg: ModelConfig, tokens: jax.Array, *,
 
     enc_kv_stack = None
     if cfg.family == "encdec":
-        enc_out = _encoder_forward(params, cfg, audio_embeds)
-        # cross-attention K/V per decoder layer
-        T = enc_out.shape[1]
-
-        def cross_kv(lp):
-            k = layers.linear(lp["cross"]["wk"], enc_out, cfg).reshape(
-                B, T, cfg.num_kv_heads, cfg.head_dim)
-            v = layers.linear(lp["cross"]["wv"], enc_out, cfg).reshape(
-                B, T, cfg.num_kv_heads, cfg.head_dim)
-            return (k, v)
-
-        enc_kv_stack = jax.vmap(cross_kv)(params["layers"])   # (L, B, T, H, D)
+        enc_kv_stack = encode_cross_kv(params, cfg, audio_embeds)
 
     def body(h, xs):
         if cfg.family == "encdec":
@@ -368,7 +378,8 @@ def prefill(params, cfg: ModelConfig, tokens, *, cache_len: int,
 
 
 def decode_step(params, cfg: ModelConfig, state, tokens: jax.Array,
-                pos: jax.Array, *, tables=None, cache_len: int = 0,
+                pos: jax.Array, *, tables=None, active=None,
+                cache_len: int = 0,
                 kv_format: str = DEFAULT_KV_FORMAT,
                 attn_path: str = "gather"):
     """One decode step. tokens: (B,) int32; pos: (B,) absolute positions.
@@ -379,8 +390,12 @@ def decode_step(params, cfg: ModelConfig, state, tokens: jax.Array,
     scattered at ``pos % cache_len`` and attention runs on ``attn_path`` —
     ``"gather"`` reassembles each slot's ring window then runs the
     unchanged ring attention; ``"fused"`` walks the block table inside the
-    Pallas kernel (one pass, token-identical). Returns (logits (B, V)
-    fp32, new state).
+    Pallas kernel (one pass, token-identical). ``active`` (B,) bool masks
+    recurrent-carry writes for rows that are not decoding (a slot mid
+    chunked-prefill shares the batch: a masked table already protects its
+    KV pages, but rwkv/ssm carries are per-row state and would be
+    clobbered by the dummy token without the mask). Returns (logits
+    (B, V) fp32, new state).
     """
     h = layers.embed(params["embed"], tokens)            # (B, d)
     B = h.shape[0]
@@ -425,12 +440,20 @@ def decode_step(params, cfg: ModelConfig, state, tokens: jax.Array,
             h = h + rwkv.channel_mix(
                 {k: lp[k] for k in ("cm_k", "cm_v")}, x2,
                 ce["cm_shift"], cfg)
-            ce = dict(st, cm_shift=x2.astype(jnp.float32))
-            return h, ce
+            ce_new = dict(st, cm_shift=x2.astype(jnp.float32))
+            if active is not None:
+                ce_new = {
+                    k: jnp.where(
+                        active.reshape((-1,) + (1,) * (ce_new[k].ndim - 1)),
+                        ce_new[k], ce[k])
+                    for k in ce_new}
+            return h, ce_new
         x1 = _norm(cfg, lp["norm1"], h)
         if cfg.family == "hybrid":
             a, kvnew = attn_step(lp["attn"], x1, ce["kv"])
             s_out, s_new = ssm.ssm_step(lp["ssm"], x1, ce["ssm"], cfg)
+            if active is not None:
+                s_new = jnp.where(active[:, None, None], s_new, ce["ssm"])
             h = h + 0.5 * (a + s_out)
             h = h + _mlp(lp["mlp"], cfg, _norm(cfg, lp["norm2"], h))
             return h, {"kv": kvnew, "ssm": s_new}
@@ -466,185 +489,345 @@ def decode_step(params, cfg: ModelConfig, state, tokens: jax.Array,
     return logits, new_state
 
 
-CHUNKABLE_FAMILIES = ("dense", "moe")
+# Families whose decode state carries per-slot recurrent leaves (rwkv
+# wkv/shift/cm_shift, hybrid ssm) that chunked prefill threads through
+# `prefill_chunk_step` and speculative verify checkpoints per position.
+# Every family chunks; this tuple only marks the ones that need carry
+# plumbing (and whose carries a draft model cannot rewind).
+CARRY_FAMILIES = ("rwkv", "hybrid")
+
+
+def _logits_head(params, cfg: ModelConfig, h):
+    if cfg.tie_embeddings:
+        return layers.unembed(params["embed"], h)
+    return layers.linear(params["lm_head"], h, cfg).astype(jnp.float32)
+
+
+def _last_valid_row(h, positions):
+    """h: (B, C, d); positions (B, C) with -1 padding → (B, d) at the last
+    valid position (row 0 for fully-padded rows — callers discard them)."""
+    last = jnp.maximum(
+        jnp.sum((positions >= 0).astype(jnp.int32), axis=1) - 1, 0)
+    return jnp.take_along_axis(
+        h, last[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+
+
+def _ffn_seq(lp, cfg: ModelConfig, hc):
+    """Post-attention FFN tail shared by the chunk/verify layer bodies."""
+    if cfg.family == "moe":
+        y, _aux = moe.moe_ffn(
+            lp["moe"], _norm(cfg, lp["norm2"], hc),
+            num_experts=cfg.num_experts, top_k=cfg.experts_per_token,
+            capacity_factor=cfg.moe_capacity_factor, cfg=cfg)
+        return hc + y
+    return hc + _mlp(lp["mlp"], cfg, _norm(cfg, lp["norm2"], hc))
+
+
+def _paged_chunk_attn(ap, cfg: ModelConfig, x1, pool, tables, positions,
+                      safe_pos, *, fmt, cache_len: int, batched: bool):
+    """Self-attention for a (B, C) token window over the paged pool.
+
+    Shared by chunked prefill (B=1, one slot table) and speculative verify
+    (full batch, per-slot tables). Per layer the window's K/V are gathered
+    from the slot pages *first*, then the chunk's own K/V appended as an
+    explicit segment and scattered back — gather BEFORE scatter, because
+    when the stream wraps the logical window (prompt > cache_len on SWA
+    archs) the chunk's offsets overwrite the oldest in-window entries,
+    which this chunk's earliest queries still attend. Window entries at
+    chunk positions (a sharing peer's copy of what this chunk recomputes,
+    or its decode appends) are masked off to keep the softmax
+    single-counted. Returns (attn out (B, C, d), new pool).
+    """
+    B, C, _ = x1.shape
+    H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = layers.shard_hint(
+        layers.linear(ap["wq"], x1, cfg).reshape(B, C, H, D), "bshd")
+    k = layers.shard_hint(
+        layers.linear(ap["wk"], x1, cfg).reshape(B, C, Hkv, D), "bshd")
+    v = layers.shard_hint(
+        layers.linear(ap["wv"], x1, cfg).reshape(B, C, Hkv, D), "bshd")
+    q = layers.apply_rope(q, safe_pos, cfg.rope_theta)
+    k = layers.apply_rope(k, safe_pos, cfg.rope_theta)
+    win = kvc.gather_window(pool, tables, fmt=fmt, out_dtype=cfg.dtype)
+    start = positions[:, :1]                          # first chunk pos
+    wpos = jnp.where(win.pos < start, win.pos, -1)
+    # the chunk segment takes the same quantize→dequantize round-trip
+    # as its stored copy, so intra-chunk attention sees exactly what
+    # later queries will gather (a no-op for kv_fp16)
+    kr = kv_dequantize(*kv_quantize(k, fmt), fmt=fmt, dtype=cfg.dtype)
+    vr = kv_dequantize(*kv_quantize(v, fmt), fmt=fmt, dtype=cfg.dtype)
+    seq = attention.KVCache(
+        k=jnp.concatenate([win.k, kr.astype(win.k.dtype)], axis=1),
+        v=jnp.concatenate([win.v, vr.astype(win.v.dtype)], axis=1),
+        pos=jnp.concatenate([wpos, positions], axis=1))
+    o = attention.prefix_chunk_attention(q, seq, positions,
+                                         window=cfg.sliding_window)
+    if batched:
+        pool = kvc.scatter_chunks(pool, tables, k, v, positions,
+                                  cache_len=cache_len, fmt=fmt)
+    else:
+        pool = kvc.scatter_chunk(pool, tables[0], k[0], v[0], positions[0],
+                                 cache_len=cache_len, fmt=fmt)
+    a = layers.linear(ap["wo"], o.reshape(B, C, H * D), cfg)
+    return layers.shard_hint(a, "bsd"), pool
+
+
+def _tm_params(lp):
+    return {k: lp[k] for k in ("tm_r", "tm_k", "tm_v", "tm_g", "tm_w",
+                               "tm_o", "w_bias")}
+
+
+def _cm_params(lp):
+    return {k: lp[k] for k in ("cm_k", "cm_v")}
 
 
 def prefill_chunk_step(params, cfg: ModelConfig, state, h: jax.Array,
-                       positions: jax.Array, table: jax.Array, *,
+                       positions: jax.Array, table=None, slot=None, *,
                        cache_len: int,
                        kv_format: str = DEFAULT_KV_FORMAT):
-    """One chunked-prefill step for one slot over the paged KV pool.
+    """One chunked-prefill step for one slot — the single prefill path for
+    every architecture family.
 
     h: (1, C, d) embedding chunk (token embeds, or vision-prefix embeds for
     the leading positions — the engine builds the combined stream);
     positions: (1, C) absolute positions, -1 = padding in the final chunk;
-    table: (1, T) the slot's block table. Per layer the chunk's K/V are
-    scattered into the slot's pages *first*, then the slot window is
-    gathered back — so past context and intra-chunk causality come from
-    one pos-tag mask (``attention.prefix_chunk_attention``). Only
-    attention-state families chunk (``CHUNKABLE_FAMILIES``); recurrent /
-    encoder-decoder prefill stays whole-prompt (engine fallback).
+    table: (1, T) the slot's block table (None for attention-free rwkv);
+    slot: scalar int32 row index into the batched decode state — recurrent
+    carries (rwkv wkv/shift/cm_shift, hybrid ssm) and enc-dec cross-KV are
+    per-slot leaves, gathered with ``dynamic_slice_in_dim`` outside the
+    layer scan, threaded through as scan xs/ys, and scattered back after.
+
+    Attention families scatter the chunk's K/V into the slot's pages and
+    run ``attention.prefix_chunk_attention`` over the gathered window
+    (see ``_paged_chunk_attn``); recurrent families step their masked
+    scans (``rwkv.time_mix_seq`` / ``ssm.ssm_seq`` with ``valid``), so a
+    right-padded final chunk leaves the carry at the last real token.
 
     Note on MoE: expert-capacity dropping is computed over the routing
     batch, so chunked prefill (C tokens at a time) can drop different
-    tokens than a whole-prompt pass — chunked MoE prefill is therefore
-    semantically valid but not bit-identical to the fallback (dense
-    families are token-identical; lift ``moe_capacity_factor`` to recover
-    exactness).
+    tokens than a whole-prompt pass — semantically valid but not
+    bit-identical unless ``moe_capacity_factor`` is lifted to full
+    capacity (dense families are token-identical at any chunk size).
 
     Returns (last-valid-position logits (1, V) fp32, new state).
     """
-    if cfg.family not in CHUNKABLE_FAMILIES:
-        raise ValueError(f"chunked prefill supports {CHUNKABLE_FAMILIES}, "
-                         f"not family {cfg.family!r}")
     fmt = get_kv_format(kv_format)
     B, C, _ = h.shape
-    H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    valid = positions >= 0                            # (B, C)
     safe_pos = jnp.maximum(positions, 0)
+    cache = state["cache"]
 
-    def body(hc, xs):
-        lp, pool = xs
-        hc = layers.shard_hint(hc, "bsd")
-        x1 = _norm(cfg, lp["norm1"], hc)
-        ap = lp["attn"]
-        q = layers.shard_hint(
-            layers.linear(ap["wq"], x1, cfg).reshape(B, C, H, D), "bshd")
-        k = layers.shard_hint(
-            layers.linear(ap["wk"], x1, cfg).reshape(B, C, Hkv, D), "bshd")
-        v = layers.shard_hint(
-            layers.linear(ap["wv"], x1, cfg).reshape(B, C, Hkv, D), "bshd")
-        q = layers.apply_rope(q, safe_pos, cfg.rope_theta)
-        k = layers.apply_rope(k, safe_pos, cfg.rope_theta)
-        # gather BEFORE scatter: when the stream wraps the logical window
-        # (prompt > cache_len on SWA archs) the chunk's offsets overwrite
-        # the oldest in-window entries, which this chunk's earliest
-        # queries still attend — so the window is read first and the
-        # chunk's own K/V are appended as an explicit segment. Window
-        # entries at chunk positions (a sharing peer's copy of what this
-        # chunk recomputes, or its decode appends) are masked off to keep
-        # the softmax single-counted.
-        win = kvc.gather_window(pool, table, fmt=fmt, out_dtype=cfg.dtype)
-        start = positions[:, :1]                          # first chunk pos
-        wpos = jnp.where(win.pos < start, win.pos, -1)
-        # the chunk segment takes the same quantize→dequantize round-trip
-        # as its stored copy, so intra-chunk attention sees exactly what
-        # later queries will gather (a no-op for kv_fp16)
-        kr = kv_dequantize(*kv_quantize(k, fmt), fmt=fmt, dtype=cfg.dtype)
-        vr = kv_dequantize(*kv_quantize(v, fmt), fmt=fmt, dtype=cfg.dtype)
-        seq = attention.KVCache(
-            k=jnp.concatenate([win.k, kr.astype(win.k.dtype)], axis=1),
-            v=jnp.concatenate([win.v, vr.astype(win.v.dtype)], axis=1),
-            pos=jnp.concatenate([wpos, positions], axis=1))
-        o = attention.prefix_chunk_attention(q, seq, positions,
-                                             window=cfg.sliding_window)
-        pool = kvc.scatter_chunk(pool, table[0], k[0], v[0], positions[0],
-                                 cache_len=cache_len, fmt=fmt)
-        a = layers.linear(ap["wo"], o.reshape(B, C, H * D), cfg)
-        hc = hc + layers.shard_hint(a, "bsd")
-        if cfg.family == "moe":
-            y, _aux = moe.moe_ffn(
-                lp["moe"], _norm(cfg, lp["norm2"], hc),
-                num_experts=cfg.num_experts, top_k=cfg.experts_per_token,
-                capacity_factor=cfg.moe_capacity_factor, cfg=cfg)
-            hc = hc + y
-        else:
-            hc = hc + _mlp(lp["mlp"], cfg, _norm(cfg, lp["norm2"], hc))
-        return hc, pool
+    def row(leaf):
+        return jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=1)
 
-    h, new_pool = jax.lax.scan(body, h, (params["layers"],
-                                         state["cache"]["kv"]))
-    h = _norm(cfg, params["final_norm"], h)
-    last = jnp.maximum(
-        jnp.sum((positions >= 0).astype(jnp.int32), axis=1) - 1, 0)   # (B,)
-    h_last = jnp.take_along_axis(
-        h, last[:, None, None].astype(jnp.int32), axis=1)[:, 0]       # (B, d)
-    if cfg.tie_embeddings:
-        logits = layers.unembed(params["embed"], h_last)
+    def unrow(leaf, new):
+        return jax.lax.dynamic_update_slice_in_dim(
+            leaf, new.astype(leaf.dtype), slot, axis=1)
+
+    if cfg.family == "rwkv":
+        xs = (params["layers"], row(cache["wkv"]), row(cache["shift"]),
+              row(cache["cm_shift"]))
+
+        def body(hc, xs_):
+            lp, wkv_l, sh_l, cm_l = xs_
+            hc = layers.shard_hint(hc, "bsd")
+            x1 = _norm(cfg, lp["norm1"], hc)
+            tm, st = rwkv.time_mix_seq(
+                _tm_params(lp), x1, {"wkv": wkv_l, "shift": sh_l},
+                num_heads=cfg.num_heads, cfg=cfg, valid=valid)
+            hc = hc + tm
+            x2 = _norm(cfg, lp["norm2"], hc)
+            prev = jnp.concatenate(
+                [cm_l.astype(x2.dtype)[:, None], x2[:, :-1]], axis=1)
+            hc = hc + rwkv.channel_mix(_cm_params(lp), x2, prev, cfg)
+            last = jnp.maximum(jnp.sum(valid.astype(jnp.int32), 1) - 1, 0)
+            cm_new = jnp.take_along_axis(x2, last[:, None, None], axis=1)[:, 0]
+            cm_new = jnp.where(valid.any(1)[:, None],
+                               cm_new.astype(jnp.float32), cm_l)
+            return hc, (st["wkv"], st["shift"], cm_new)
+
+        h, (wkv_n, sh_n, cm_n) = jax.lax.scan(body, h, xs)
+        new_cache = dict(cache, wkv=unrow(cache["wkv"], wkv_n),
+                         shift=unrow(cache["shift"], sh_n),
+                         cm_shift=unrow(cache["cm_shift"], cm_n))
+        new_state = dict(state, cache=new_cache)
+    elif cfg.family == "hybrid":
+        xs = (params["layers"], cache["kv"], row(cache["ssm"]))
+
+        def body(hc, xs_):
+            lp, pool, ssm_l = xs_
+            hc = layers.shard_hint(hc, "bsd")
+            x1 = _norm(cfg, lp["norm1"], hc)
+            a, pool = _paged_chunk_attn(
+                lp["attn"], cfg, x1, pool, table, positions, safe_pos,
+                fmt=fmt, cache_len=cache_len, batched=False)
+            s_out, s_fin = ssm.ssm_seq(lp["ssm"], x1, ssm_l, cfg, valid=valid)
+            hc = hc + 0.5 * (a + s_out)
+            return _ffn_seq(lp, cfg, hc), (pool, s_fin)
+
+        h, (new_pool, ssm_n) = jax.lax.scan(body, h, xs)
+        new_state = dict(state, cache=dict(cache, kv=new_pool,
+                                           ssm=unrow(cache["ssm"], ssm_n)))
+    elif cfg.family == "encdec":
+        xs = (params["layers"], cache["kv"], row(state["enc_kv"][0]),
+              row(state["enc_kv"][1]))
+
+        def body(hc, xs_):
+            lp, pool, ek_l, ev_l = xs_
+            hc = layers.shard_hint(hc, "bsd")
+            x1 = _norm(cfg, lp["norm1"], hc)
+            a, pool = _paged_chunk_attn(
+                lp["attn"], cfg, x1, pool, table, positions, safe_pos,
+                fmt=fmt, cache_len=cache_len, batched=False)
+            hc = hc + a
+            hc = hc + _cross_attn_seq(
+                lp["cross"], cfg, _norm(cfg, lp["norm3"], hc), (ek_l, ev_l))
+            return _ffn_seq(lp, cfg, hc), pool
+
+        h, new_pool = jax.lax.scan(body, h, xs)
+        new_state = dict(state, cache=dict(cache, kv=new_pool))
     else:
-        logits = layers.linear(params["lm_head"], h_last,
-                               cfg).astype(jnp.float32)
-    new_state = dict(state, cache=dict(state["cache"], kv=new_pool))
+
+        def body(hc, xs_):
+            lp, pool = xs_
+            hc = layers.shard_hint(hc, "bsd")
+            x1 = _norm(cfg, lp["norm1"], hc)
+            a, pool = _paged_chunk_attn(
+                lp["attn"], cfg, x1, pool, table, positions, safe_pos,
+                fmt=fmt, cache_len=cache_len, batched=False)
+            return _ffn_seq(lp, cfg, hc + a), pool
+
+        h, new_pool = jax.lax.scan(body, h, (params["layers"], cache["kv"]))
+        new_state = dict(state, cache=dict(cache, kv=new_pool))
+
+    h = _norm(cfg, params["final_norm"], h)
+    logits = _logits_head(params, cfg, _last_valid_row(h, positions))
     return logits, new_state
 
 
 def verify_step(params, cfg: ModelConfig, state, tokens: jax.Array,
-                positions: jax.Array, tables: jax.Array, *,
+                positions: jax.Array, tables=None, *,
                 cache_len: int, kv_format: str = DEFAULT_KV_FORMAT):
-    """Batched speculative-verify step over the paged KV pool.
+    """Batched speculative-verify step — every family.
 
     tokens: (B, C) int32 — per slot, the last emitted token followed by up
     to C-1 draft tokens; positions: (B, C) absolute, -1 = padding (short
-    proposals, inactive rows); tables: (B, T) block tables. One forward
-    pass scores every position of every slot: per layer the batch's K/V
-    are scattered into the pool (``kvcache.scatter_chunks``) and the slot
-    windows gathered back, with ``attention.prefix_chunk_attention``'s
-    pos-tag masking providing past context and intra-window causality —
-    the same math as chunked prefill, so greedy acceptance against the
-    returned per-position argmax is token-identical to plain decode.
+    proposals, inactive rows); tables: (B, T) block tables (None for
+    attention-free rwkv). One forward pass scores every position of every
+    slot with the same math as chunked prefill, so greedy acceptance
+    against the returned per-position argmax is token-identical to plain
+    decode.
 
-    Rejected drafts leave stale pool entries *above* each slot's accepted
-    frontier; their tags exceed every later query position until the next
-    verify window overwrites them, so the masks (`win.pos < start` here,
-    ``kpos <= qpos`` in decode) keep them invisible throughout.
+    Attention families: rejected drafts leave stale pool entries *above*
+    each slot's accepted frontier; their tags exceed every later query
+    position until the next verify window overwrites them, so the masks
+    (``win.pos < start`` here, ``kpos <= qpos`` in decode) keep them
+    invisible throughout — the engine rolls pages back at the allocator.
 
-    Returns (logits (B, C, V) fp32 over every position, new state).
+    Carry families can't roll back by masking — the recurrence folds every
+    consumed token into one state — so their carries are *checkpointed*:
+    the third return value stacks, per leaf, C+1 snapshots along a new
+    axis 2 (index 0 = the incoming carry, index n = the carry after
+    consuming n window positions; rwkv shift/cm_shift checkpoints are the
+    per-position x1/x2 rows the decode step would have latched). The
+    engine selects index ``1 + accepted`` per row (0 for inactive rows)
+    and writes it back — ``state``'s own carry leaves are returned
+    UNCHANGED so the selection is the only write. Third value is None for
+    attention-only families.
+
+    Returns (logits (B, C, V) fp32, new state, carries-or-None).
     """
-    if cfg.family not in CHUNKABLE_FAMILIES:
-        raise ValueError(f"speculative verify supports {CHUNKABLE_FAMILIES}, "
-                         f"not family {cfg.family!r}")
     fmt = get_kv_format(kv_format)
     h = layers.embed(params["embed"], jnp.maximum(tokens, 0))   # (B, C, d)
     B, C, _ = h.shape
-    H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    valid = positions >= 0
     safe_pos = jnp.maximum(positions, 0)
+    cache = state["cache"]
+    carries = None
 
-    def body(hc, xs):
-        lp, pool = xs
-        hc = layers.shard_hint(hc, "bsd")
-        x1 = _norm(cfg, lp["norm1"], hc)
-        ap = lp["attn"]
-        q = layers.shard_hint(
-            layers.linear(ap["wq"], x1, cfg).reshape(B, C, H, D), "bshd")
-        k = layers.shard_hint(
-            layers.linear(ap["wk"], x1, cfg).reshape(B, C, Hkv, D), "bshd")
-        v = layers.shard_hint(
-            layers.linear(ap["wv"], x1, cfg).reshape(B, C, Hkv, D), "bshd")
-        q = layers.apply_rope(q, safe_pos, cfg.rope_theta)
-        k = layers.apply_rope(k, safe_pos, cfg.rope_theta)
-        win = kvc.gather_window(pool, tables, fmt=fmt, out_dtype=cfg.dtype)
-        start = positions[:, :1]
-        wpos = jnp.where(win.pos < start, win.pos, -1)
-        kr = kv_dequantize(*kv_quantize(k, fmt), fmt=fmt, dtype=cfg.dtype)
-        vr = kv_dequantize(*kv_quantize(v, fmt), fmt=fmt, dtype=cfg.dtype)
-        seq = attention.KVCache(
-            k=jnp.concatenate([win.k, kr.astype(win.k.dtype)], axis=1),
-            v=jnp.concatenate([win.v, vr.astype(win.v.dtype)], axis=1),
-            pos=jnp.concatenate([wpos, positions], axis=1))
-        o = attention.prefix_chunk_attention(q, seq, positions,
-                                             window=cfg.sliding_window)
-        pool = kvc.scatter_chunks(pool, tables, k, v, positions,
-                                  cache_len=cache_len, fmt=fmt)
-        a = layers.linear(ap["wo"], o.reshape(B, C, H * D), cfg)
-        hc = hc + layers.shard_hint(a, "bsd")
-        if cfg.family == "moe":
-            y, _aux = moe.moe_ffn(
-                lp["moe"], _norm(cfg, lp["norm2"], hc),
-                num_experts=cfg.num_experts, top_k=cfg.experts_per_token,
-                capacity_factor=cfg.moe_capacity_factor, cfg=cfg)
-            hc = hc + y
-        else:
-            hc = hc + _mlp(lp["mlp"], cfg, _norm(cfg, lp["norm2"], hc))
-        return hc, pool
+    if cfg.family == "rwkv":
+        xs = (params["layers"], cache["wkv"], cache["shift"],
+              cache["cm_shift"])
 
-    h, new_pool = jax.lax.scan(body, h, (params["layers"],
-                                         state["cache"]["kv"]))
-    h = _norm(cfg, params["final_norm"], h)
-    if cfg.tie_embeddings:
-        logits = layers.unembed(params["embed"], h)
+        def body(hc, xs_):
+            lp, wkv_l, sh_l, cm_l = xs_
+            hc = layers.shard_hint(hc, "bsd")
+            x1 = _norm(cfg, lp["norm1"], hc)
+            tm, _st, wkv_steps = rwkv.time_mix_seq(
+                _tm_params(lp), x1, {"wkv": wkv_l, "shift": sh_l},
+                num_heads=cfg.num_heads, cfg=cfg, valid=valid,
+                collect_states=True)
+            hc = hc + tm
+            x2 = _norm(cfg, lp["norm2"], hc)
+            prev = jnp.concatenate(
+                [cm_l.astype(x2.dtype)[:, None], x2[:, :-1]], axis=1)
+            hc = hc + rwkv.channel_mix(_cm_params(lp), x2, prev, cfg)
+            # checkpoint n = carry after n consumed positions; the decode
+            # step latches shift=x1 and cm_shift=x2 at each token
+            wkv_s = jnp.concatenate([wkv_l[:, None], wkv_steps], axis=1)
+            sh_s = jnp.concatenate(
+                [sh_l[:, None], x1.astype(jnp.float32)], axis=1)
+            cm_s = jnp.concatenate(
+                [cm_l[:, None], x2.astype(jnp.float32)], axis=1)
+            return hc, (wkv_s, sh_s, cm_s)
+
+        h, (wkv_s, sh_s, cm_s) = jax.lax.scan(body, h, xs)
+        carries = {"wkv": wkv_s, "shift": sh_s, "cm_shift": cm_s}
+        new_state = state
+    elif cfg.family == "hybrid":
+        xs = (params["layers"], cache["kv"], cache["ssm"])
+
+        def body(hc, xs_):
+            lp, pool, ssm_l = xs_
+            hc = layers.shard_hint(hc, "bsd")
+            x1 = _norm(cfg, lp["norm1"], hc)
+            a, pool = _paged_chunk_attn(
+                lp["attn"], cfg, x1, pool, tables, positions, safe_pos,
+                fmt=fmt, cache_len=cache_len, batched=True)
+            s_out, _s_fin, s_steps = ssm.ssm_seq(
+                lp["ssm"], x1, ssm_l, cfg, valid=valid, collect_states=True)
+            hc = hc + 0.5 * (a + s_out)
+            ssm_s = jnp.concatenate([ssm_l[:, None], s_steps], axis=1)
+            return _ffn_seq(lp, cfg, hc), (pool, ssm_s)
+
+        h, (new_pool, ssm_s) = jax.lax.scan(body, h, xs)
+        carries = {"ssm": ssm_s}
+        new_state = dict(state, cache=dict(cache, kv=new_pool))
+    elif cfg.family == "encdec":
+        xs = (params["layers"], cache["kv"], state["enc_kv"][0],
+              state["enc_kv"][1])
+
+        def body(hc, xs_):
+            lp, pool, ek_l, ev_l = xs_
+            hc = layers.shard_hint(hc, "bsd")
+            x1 = _norm(cfg, lp["norm1"], hc)
+            a, pool = _paged_chunk_attn(
+                lp["attn"], cfg, x1, pool, tables, positions, safe_pos,
+                fmt=fmt, cache_len=cache_len, batched=True)
+            hc = hc + a
+            hc = hc + _cross_attn_seq(
+                lp["cross"], cfg, _norm(cfg, lp["norm3"], hc), (ek_l, ev_l))
+            return _ffn_seq(lp, cfg, hc), pool
+
+        h, new_pool = jax.lax.scan(body, h, xs)
+        new_state = dict(state, cache=dict(cache, kv=new_pool))
     else:
-        logits = layers.linear(params["lm_head"], h, cfg).astype(jnp.float32)
-    new_state = dict(state, cache=dict(state["cache"], kv=new_pool))
-    return logits, new_state
+
+        def body(hc, xs_):
+            lp, pool = xs_
+            hc = layers.shard_hint(hc, "bsd")
+            x1 = _norm(cfg, lp["norm1"], hc)
+            a, pool = _paged_chunk_attn(
+                lp["attn"], cfg, x1, pool, tables, positions, safe_pos,
+                fmt=fmt, cache_len=cache_len, batched=True)
+            return _ffn_seq(lp, cfg, hc + a), pool
+
+        h, new_pool = jax.lax.scan(body, h, (params["layers"], cache["kv"]))
+        new_state = dict(state, cache=dict(cache, kv=new_pool))
+
+    h = _norm(cfg, params["final_norm"], h)
+    logits = _logits_head(params, cfg, h)
+    return logits, new_state, carries
 
 
 def init_decode_state(cfg: ModelConfig, batch: int, cache_len: int):

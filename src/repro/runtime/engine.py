@@ -22,11 +22,13 @@ engine (``paged=False``), SWA/vision-prefix masking included.
 Slot lifecycle (see docs/serving.md):
 
   admit   — a free slot takes the next arrived request; its pages are
-            shared-or-allocated and its prompt is prefilled either whole
-            (fallback: recurrent / encoder-decoder families) or in
-            **chunks of ``prefill_chunk`` tokens interleaved with decode
-            steps** — a long prompt no longer stalls decode for the
-            already-running slots.
+            shared-or-allocated and its prompt prefills in **chunks of
+            ``prefill_chunk`` tokens interleaved with decode steps** —
+            the single prefill path for every family (recurrent carries
+            and enc-dec cross-KV thread through the chunk step) — a long
+            prompt never stalls decode for the already-running slots. A
+            page-aligned prefix retained warm in the allocator (see
+            ``warm_cache_mb``) re-admits with zero prefill steps.
   decode  — one ``serve_step`` over all ``max_batch`` slots; inactive
             slots' writes are redirected into the null block and their
             outputs ignored.
@@ -111,6 +113,10 @@ class ServeReport:
                                            # and baseline runs compare 1:1
     decode_s: float = 0.0
     prefill_s: float = 0.0
+    warm_hits: int = 0                     # admits that adopted ≥1 warm page
+    warm_misses: int = 0                   # admits that found none warm
+    prefill_steps_saved: int = 0           # chunk steps avoided by shared /
+                                           # warm prefix pages, summed
     step_records: List[dict] = dataclasses.field(default_factory=list)
     peak_pages: int = 0                    # paged: max live blocks seen
     proposed_tokens: int = 0               # speculative: drafts scored
@@ -226,11 +232,16 @@ class ServingEngine:
 
     ``paged=True`` (default) stores context in the paged, prefix-shared
     block pool; ``paged=False`` keeps the legacy per-slot ring caches
-    (the reference the parity suite compares against). ``prefill_chunk``
-    enables chunked prefill (attention-state families): at most that many
-    prompt tokens are processed per engine step, interleaved with decode.
-    ``kv_format`` selects the KV block storage (``kv_fp16`` passthrough or
-    ``kv8_channel`` per-head INT8 — paged mode only).
+    (the reference the parity suite compares against). Paged mode always
+    prefills in chunks — the one prefill path, every family: at most
+    ``prefill_chunk`` (default 32) prompt tokens are processed per engine
+    step, interleaved with decode; recurrent carries (rwkv/hybrid) and
+    enc-dec cross-KV thread through the chunk step. ``kv_format`` selects
+    the KV block storage (``kv_fp16`` passthrough or ``kv8_channel``
+    per-head INT8 — paged mode only). ``warm_cache_mb`` budgets the
+    allocator's warm prefix retention: fully-released page-aligned prefix
+    chains stay resident (LRU by chain) up to that many MiB, and a
+    returning prefix re-admits without recomputing its prefill.
 
     ``mesh=None`` runs single-device (plain ``jax.jit``); with a mesh the
     steps are jitted with explicit shardings and the kernel plans are
@@ -244,6 +255,7 @@ class ServingEngine:
                  page_size: int = 16, prefill_chunk: Optional[int] = None,
                  kv_format: Optional[str] = None,
                  num_pages: Optional[int] = None,
+                 warm_cache_mb: float = 0.0,
                  speculate=None, spec_k: int = 4,
                  admission: str = "fifo",
                  attn_path: str = "auto"):
@@ -278,6 +290,13 @@ class ServingEngine:
             self.cache_len = int(cache_len)
             if ps:
                 self.cache_len = -(-self.cache_len // ps) * ps
+        # chunked prefill is the single prefill path whenever the caller
+        # asked for the paged engine — including rwkv, whose "paged" mode
+        # degenerates to ring state but still streams its prompt in chunks
+        self.chunked = bool(paged)
+        # prefix pages can only be *skipped* when no recurrent carry must
+        # consume every prompt token — carry families recompute each token
+        self.share_prefix = self.paged and cfg.family not in T.CARRY_FAMILIES
         if self.paged:
             self.pages_slot = self.cache_len // self.page_size
             self.num_pages = int(
@@ -291,16 +310,28 @@ class ServingEngine:
                     f"slot's window ({self.pages_slot} pages + the null "
                     f"block) — the admit gate would wait forever; size "
                     f"the pool with configs.shapes.serve_num_pages")
-            self.alloc = kvc.BlockAllocator(self.num_pages, self.page_size)
+            # bytes one block occupies across every layer's pool leaves
+            # (scales + pos tags included) — the warm LRU budget unit
+            pool_abs = jax.eval_shape(
+                lambda: kvc.init_pool(
+                    self.num_pages, self.page_size, cfg.num_kv_heads,
+                    cfg.head_dim, cfg.dtype, kv_format=self.kv_format))
+            block_bytes = sum(
+                l.size * jnp.dtype(l.dtype).itemsize
+                for l in jax.tree_util.tree_leaves(pool_abs)
+            ) // self.num_pages * cfg.num_layers
+            warm_bytes = int(float(warm_cache_mb) * (1 << 20)) \
+                if self.share_prefix else 0
+            self.alloc = kvc.BlockAllocator(
+                self.num_pages, self.page_size,
+                warm_bytes=warm_bytes, block_bytes=block_bytes)
         else:
             self.pages_slot = 0
             self.num_pages = 0
             self.alloc = None
-        self.prefill_chunk = (None if prefill_chunk is None
-                              else max(1, min(int(prefill_chunk),
-                                              self.cache_len)))
-        self._chunkable = (self.paged and self.prefill_chunk is not None
-                           and cfg.family in T.CHUNKABLE_FAMILIES)
+        self.prefill_chunk = max(
+            1, min(int(prefill_chunk) if prefill_chunk is not None else 32,
+                   self.cache_len))
 
         # decode-attention path: a costed plan decision, same shape as the
         # matmul planner — "auto" ranks ring/gather/fused on the engine's
@@ -324,11 +355,11 @@ class ServingEngine:
         if speculate is not None and speculate != "off":
             if isinstance(speculate, spec.Proposer):
                 spec.validate_speculate(speculate.name, self.spec_k,
-                                        cfg=cfg, paged=self.paged)
+                                        cfg=cfg, paged=self.chunked)
                 self.proposer = speculate
             else:
                 spec.validate_speculate(str(speculate), self.spec_k,
-                                        cfg=cfg, paged=self.paged)
+                                        cfg=cfg, paged=self.chunked)
                 self.proposer = spec.make_proposer(str(speculate),
                                                    target_cfg=cfg)
 
@@ -362,6 +393,10 @@ class ServingEngine:
         self._chunk_fn = None
         self._verify_fn = None
         self._embed_fn = None
+        self._encode_fn = None
+        # interleaved decode steps must not clobber the carries of slots
+        # still mid-prefill — those step functions take an "active" mask
+        self._needs_active = self.chunked and cfg.family in T.CARRY_FAMILIES
         self._tables = None          # (B, pages_slot) np.int32 block tables
         self._keys_cache: Dict[int, Any] = {}   # id(req) → prefix keys
         self._reserve: Dict[int, int] = {}      # slot → outstanding worst-
@@ -439,6 +474,9 @@ class ServingEngine:
         if self.paged:
             inputs["tables"] = jax.ShapeDtypeStruct(
                 (self.max_batch, self.pages_slot), jnp.int32)
+        if self._needs_active:
+            inputs["active"] = jax.ShapeDtypeStruct((self.max_batch,),
+                                                    jnp.bool_)
         return inputs
 
     def _serve_step(self):
@@ -472,9 +510,11 @@ class ServingEngine:
                     "h": jax.ShapeDtypeStruct((1, C, self.cfg.d_model),
                                               self.cfg.dtype),
                     "positions": jax.ShapeDtypeStruct((1, C), jnp.int32),
-                    "table": jax.ShapeDtypeStruct((1, self.pages_slot),
-                                                  jnp.int32),
+                    "slot": jax.ShapeDtypeStruct((), jnp.int32),
                 }  # "state" is split out as its own (donated) argument
+                if self.paged:
+                    inputs_abs["table"] = jax.ShapeDtypeStruct(
+                        (1, self.pages_slot), jnp.int32)
                 self._chunk_fn = rsteps.jit_prefill_chunk_step(
                     self.cfg, self.mesh, self.cache_len,
                     jax.eval_shape(lambda: self.params), inputs_abs,
@@ -500,9 +540,10 @@ class ServingEngine:
                                                    jnp.int32),
                     "positions": jax.ShapeDtypeStruct((self.max_batch, C),
                                                       jnp.int32),
-                    "tables": jax.ShapeDtypeStruct(
-                        (self.max_batch, self.pages_slot), jnp.int32),
                 }
+                if self.paged:
+                    inputs_abs["tables"] = jax.ShapeDtypeStruct(
+                        (self.max_batch, self.pages_slot), jnp.int32)
                 self._state_shardings = shd.decode_state_shardings(
                     inputs_abs["state"], self.cfg, self.mesh)
                 self._verify_fn = rsteps.jit_verify_step(
@@ -516,6 +557,47 @@ class ServingEngine:
             self._embed_fn = jax.jit(
                 lambda p, t: layers.embed(p["embed"], t))
         return self._embed_fn(self.params, tokens)
+
+    def _reset_carry(self, state, i: int):
+        """Zero slot ``i``'s recurrent carry rows (wkv/shift/ssm …) before
+        its chunked prefill starts streaming real tokens through them."""
+        carry_names = ("wkv", "shift", "cm_shift", "ssm")
+        cache = {k: (v.at[:, i].set(0) if k in carry_names else v)
+                 for k, v in state["cache"].items()}
+        return dict(state, cache=cache)
+
+    def _insert_enc_kv(self, state, i: int, req: Request):
+        """Run the audio encoder + per-layer cross K/V projections for
+        ``req`` and write them into slot ``i``'s rows — the only
+        whole-sequence work left outside the chunk step (it consumes the
+        audio, not the prompt, so chunking does not apply)."""
+        if self._encode_fn is None:
+            self._encode_fn = jax.jit(
+                lambda p, a: T.encode_cross_kv(p, self.cfg, a))
+        ae = req.audio_embeds
+        if ae is None:
+            ae = jnp.zeros((self.cfg.encoder_seq, self.cfg.d_model),
+                           self.cfg.dtype)
+        ek, ev = self._encode_fn(self.params,
+                                 jnp.asarray(ae, self.cfg.dtype)[None])
+        sk, sv = state["enc_kv"]
+        return dict(state, enc_kv=(
+            sk.at[:, i].set(ek[:, 0].astype(sk.dtype)),
+            sv.at[:, i].set(ev[:, 0].astype(sv.dtype))))
+
+    def _apply_carry_selection(self, state, carries, sel):
+        """Commit the verify step's carry checkpoints: for each row, write
+        back checkpoint ``sel[b]`` — 0 restores the pre-verify carry
+        (inactive rows), n commits the carry after n consumed positions
+        (1 + accepted drafts). The verify step leaves the state's own
+        carry leaves untouched, so this is the only writer."""
+        idx = jnp.asarray(sel, jnp.int32)
+        cache = dict(state["cache"])
+        for name, stack in carries.items():
+            ix = idx.reshape((1, -1, 1) + (1,) * (stack.ndim - 3))
+            taken = jnp.take_along_axis(stack, ix, axis=2)[:, :, 0]
+            cache[name] = taken.astype(cache[name].dtype)
+        return dict(state, cache=cache)
 
     def _constrain_state(self, state):
         """Pin ``state`` back onto the decode-state shardings. The eager
@@ -536,6 +618,21 @@ class ServingEngine:
 
     def _consume_reserve(self, i: int) -> None:
         self._reserve[i] = max(0, self._reserve.get(i, 0) - 1)
+
+    def _drain_reclaimed(self, state):
+        """Wipe the pos tags of blocks the allocator evicted from the warm
+        set since the last drain. A warm block keeps real (published)
+        content; once reclaimed it re-enters the free list and its stale
+        tags would read as valid context for its next owner. Returns
+        (state, device_dirty)."""
+        if self.alloc is None:
+            return state, False
+        bids = self.alloc.take_reclaimed()
+        if not bids:
+            return state, False
+        state = self._pool_map(
+            state, lambda pool: kvc.reset_blocks(pool, bids))
+        return state, True
 
     def _slot_alloc(self, i: int) -> int:
         """Allocate a block on slot ``i``'s behalf, consuming one unit of
@@ -575,7 +672,10 @@ class ServingEngine:
                 # without this, a wrapped decode recycles its prompt pages
                 # and a later identical prompt adopts destroyed content
                 self.alloc.unpublish(bid)
-        return state, dirty
+        # allocation pressure above may have evicted warm blocks — wipe
+        # their stale tags before this step's gather can see them
+        state, d = self._drain_reclaimed(state)
+        return state, dirty or d
 
     def _rollback_pages(self, state, i: int, txn, last_page: int):
         """Allocator-level rollback of a speculative step's page mappings
@@ -622,6 +722,13 @@ class ServingEngine:
         cached = self._keys_cache.get(id(req))
         if cached is None:
             cfg = self.cfg
+            if not self.share_prefix:
+                # carry families compute every prompt token regardless, so
+                # prefix pages are never skipped — don't pay the hashing
+                S_total = len(req.prompt) + (cfg.vision_prefix or 0)
+                cached = (S_total, ([], None))
+                self._keys_cache[id(req)] = cached
+                return cached
             pe = self._prefix_embeds(req) if cfg.vision_prefix else None
             units = kvc.position_units(req.prompt, pe)
             seed = b""
@@ -720,20 +827,30 @@ class ServingEngine:
         S_total, (full_keys, partial) = self._prefix_keys(req)
         if S_total + req.max_new_tokens > self.cache_len:
             return self.pages_slot
+        # count only *live* shared pages — warm pages are already counted
+        # on the admit gate's supply side (pages_free + warm_pages), so
+        # discounting them here would double-count and deadlock the gate
         shared = 0
         for key in full_keys:
-            if self.alloc.peek(key) is None:
+            bid = self.alloc.peek(key)
+            if bid is None or self.alloc.is_warm(bid):
                 break
             shared += 1
         else:
-            if partial is not None and self.alloc.peek(partial[0]) is not None:
-                shared += 1
+            if partial is not None:
+                bid = self.alloc.peek(partial[0])
+                if bid is not None and not self.alloc.is_warm(bid):
+                    shared += 1
         return self.pages_slot - max(0, shared - 1)
 
     def _evict_paged(self, state, i: int):
         self._reserve.pop(i, None)
+        # decref may *retain* published prefix blocks warm instead of
+        # freeing them (warm budget permitting) — those keep their bytes;
+        # blocks the retention displaced land on the reclaimed list
         freed = [bid for bid in map(int, self._tables[i])
                  if bid >= 0 and self.alloc.decref(bid)]
+        freed += self.alloc.take_reclaimed()
         self._tables[i] = -1
         if freed:
             state = self._pool_map(
@@ -754,12 +871,26 @@ class ServingEngine:
             slot, row = pending[0]
             slot.emit_first(int(jnp.argmax(row)))
             self._note_first(slot)
+            self._cache_first_token(slot)
             return
         firsts = np.asarray(
             jnp.argmax(jnp.stack([row for _, row in pending]), axis=-1))
         for (slot, _), t in zip(pending, firsts):
             slot.emit_first(int(t))
             self._note_first(slot)
+            self._cache_first_token(slot)
+
+    def _cache_first_token(self, slot: _Slot) -> None:
+        """Attach the freshly computed first token to the prompt's final
+        chain key as allocator metadata: a later admit whose warm/live
+        prefix covers the whole prompt can then skip prefill entirely —
+        greedy decode makes the first token a pure function of the hashed
+        prefix (prompt, vision embeds, audio seed)."""
+        if not self.share_prefix:
+            return
+        fk = self._final_key(slot.pf_keys)
+        if fk is not None and slot.tokens:
+            self.alloc.set_meta(fk, int(slot.tokens[0]))
 
     def _note_first(self, slot: _Slot) -> None:
         """Record TTFT and queue the first token on the step's events."""
@@ -774,70 +905,104 @@ class ServingEngine:
                 "engine_ttft_seconds",
                 "admit to first token, per request").observe(ttft)
 
-    def _admit_paged(self, state, req: Request, i: int, t0: float,
-                     pending):
-        """Set up slot ``i`` for ``req`` on the paged pool. Returns
-        (state, slot, device_dirty): chunked-prefill slots stay in the
-        "prefill" phase (their chunks run inside the decode loop);
-        fallback families prefill whole-prompt right here and queue their
-        first-token logits on ``pending`` (batch-argmax'd by
-        :meth:`_flush_first_tokens`)."""
-        self._reserve[i] = self._required_pages(req)
+    def _final_key(self, keys) -> Optional[str]:
+        """The chain key covering a prompt's *last* position — the key the
+        first-token cache hangs off (a full match on it implies the whole
+        prefix, vision embeds and audio seed included, matched)."""
+        full_keys, partial = keys
+        if partial is not None:
+            return partial[0]
+        return full_keys[-1] if full_keys else None
+
+    def _admit_chunked(self, state, req: Request, i: int, t0: float,
+                       pending):
+        """Set up slot ``i`` for ``req`` on the chunked prefill path — the
+        one admit path for every family. Returns (state, slot,
+        device_dirty). The slot stays in the "prefill" phase (its chunks
+        run inside the decode loop) unless the warm/live prefix covers the
+        *whole* prompt and the allocator cached its first token — then the
+        slot activates immediately with zero prefill steps."""
+        if self.paged:
+            self._reserve[i] = self._required_pages(req)
         S_total, keys = self._prefix_keys(req)
         self._keys_cache.pop(id(req), None)
         slot = _Slot(req, self.pos0(req), t0)
         slot.pf_total = S_total
-        slot.pf_keys = keys
-        shared = min(self._try_share(i, keys), S_total - 1)
-
-        if self._chunkable:
+        dirty = False
+        shared = 0
+        first_tok: Optional[int] = None
+        if self.share_prefix:
+            slot.pf_keys = keys
+            warm_before = self.alloc.warm_pages
+            shared = self._try_share(i, keys)
+            warm_used = warm_before - self.alloc.warm_pages
+            if self.alloc.warm_bytes > 0:
+                if warm_used > 0:
+                    self.report.warm_hits += 1
+                else:
+                    self.report.warm_misses += 1
+                if self.metrics is not None:
+                    self.metrics.counter(
+                        "engine_warm_hits_total",
+                        "admits that adopted warm prefix pages").inc(
+                        1 if warm_used > 0 else 0)
+                    self.metrics.counter(
+                        "engine_warm_misses_total",
+                        "admits that found no warm prefix pages").inc(
+                        0 if warm_used > 0 else 1)
+            if shared >= S_total:
+                fk = self._final_key(keys)
+                meta = self.alloc.meta(fk) if fk is not None else None
+                if meta is not None:
+                    first_tok = int(meta)
+        C = self.prefill_chunk
+        cold_steps = -(-S_total // C)
+        if first_tok is not None:
+            # full-coverage hit with a cached first token: nothing to
+            # compute — the pool already holds every prompt position and
+            # greedy decode from it is deterministic
+            slot.pf_next = S_total
+            saved = cold_steps
+            slot.emit_first(first_tok)
+            self._note_first(slot)
+        else:
+            # always compute at least the final position locally (it
+            # produces the first token's logits)
+            shared = min(shared, S_total - 1)
+            saved = cold_steps - (-(-(S_total - shared) // C))
             emb = self._embed(jnp.asarray(req.prompt, jnp.int32)[None])[0]
             if self.cfg.vision_prefix:
                 emb = jnp.concatenate(
                     [self._prefix_embeds(req), emb], axis=0)
             slot.pf_stream = emb
             slot.pf_next = shared
-            return state, slot, False
-
-        # whole-prompt fallback (recurrent / encdec / chunking disabled)
-        inputs = self._prefill_inputs(req)
-        logits, rstate = self._prefill_fn(inputs)(self.params, inputs)
-        filled = min(slot.pf_total, self.cache_len)
-        tbl = self._tables[i]
-        for p in range(-(-filled // self.page_size)):
-            if tbl[p] < 0:
-                tbl[p] = self._slot_alloc(i)
-        # scatter the prefilled ring into the pool, skipping shared pages
-        # (their content is already there — writing would clobber the
-        # sharing peer's decode appends in a shared partial page)
-        masked = np.array([
-            -1 if (b >= 0 and self.alloc.refcount(int(b)) > 1) else b
-            for b in tbl], np.int32)
-        fmt = self._kvfmt
-
-        def visit(s, r):
-            if isinstance(s, kvc.PagedKVCache):
-                return kvc.scatter_ring(s, masked, r, fmt=fmt)
-            return s.at[:, i].set(r[:, 0].astype(s.dtype))
-
-        state = jax.tree.map(
-            visit, state, rstate,
-            is_leaf=lambda x: isinstance(x, kvc.PagedKVCache))
-        self._publish_keys(i, slot)
-        pending.append((slot, logits[0]))
-        return state, slot, True
+        if self.share_prefix:
+            self.report.prefill_steps_saved += saved
+            if self.metrics is not None:
+                self.metrics.histogram(
+                    "engine_prefill_steps_saved",
+                    "chunk steps avoided per admit by shared or warm "
+                    "prefix pages").observe(saved)
+        if self.cfg.family in T.CARRY_FAMILIES:
+            state = self._reset_carry(state, i)
+            dirty = True
+        if self.cfg.family == "encdec":
+            state = self._insert_enc_kv(state, i, req)
+            dirty = True
+        return state, slot, dirty
 
     def _advance_prefill(self, state, i: int, slot: _Slot, pending):
         """Run one prefill chunk for slot ``i``; returns (state, dirty)."""
         C = self.prefill_chunk
-        self._share_ahead(i, slot)
+        if self.paged:
+            self._share_ahead(i, slot)
         start, total = slot.pf_next, slot.pf_total
         end = min(start + C, total)
-        offsets = {p % self.cache_len for p in range(start, end)}
-        state, dirty = self._ensure_pages(state, i, offsets)
-        if dirty and self.mesh is not None:
-            state = self._constrain_state(state)
-            dirty = False
+        if self.paged:
+            offsets = {p % self.cache_len for p in range(start, end)}
+            state, dirty = self._ensure_pages(state, i, offsets)
+            if dirty and self.mesh is not None:
+                state = self._constrain_state(state)
         seg = slot.pf_stream[start:end]
         n = end - start
         if n < C:
@@ -845,17 +1010,21 @@ class ServingEngine:
             seg = jnp.concatenate([seg, pad], axis=0)
         positions = np.full((C,), -1, np.int32)
         positions[:n] = np.arange(start, end, dtype=np.int32)
-        res = self._chunk_step()(self.params, state, {
+        inputs = {
             "h": seg[None],
             "positions": jnp.asarray(positions)[None],
-            "table": jnp.asarray(self._tables[i:i + 1]),
-        })
+            "slot": jnp.asarray(i, jnp.int32),
+        }
+        if self.paged:
+            inputs["table"] = jnp.asarray(self._tables[i:i + 1])
+        res = self._chunk_step()(self.params, state, inputs)
         state = res["state"]
         slot.pf_next = end
         if end == total:
-            self._publish_keys(i, slot)
+            if self.paged:
+                self._publish_keys(i, slot)
             pending.append((slot, res["logits"][0]))
-        else:
+        elif self.paged:
             self._publish_keys(i, slot, upto=end)
         return state, False
 
@@ -896,6 +1065,10 @@ class ServingEngine:
             self._tables = np.full((self.max_batch, self.pages_slot),
                                    -1, np.int32)
             self._reserve.clear()
+            # the device pool is about to be re-created zeroed — warm
+            # blocks' bytes are gone, so their index entries must go too
+            self.alloc.purge_warm()
+            self.alloc.take_reclaimed()
         if self.proposer is not None:
             self.proposer.reset(self)
         with self._ctx():
@@ -1039,6 +1212,9 @@ class ServingEngine:
         if self.paged:
             m.gauge("engine_pages_in_use",
                     "live KV blocks").set(self.alloc.pages_in_use)
+            m.gauge("engine_warm_pages",
+                    "refcount-0 prefix blocks retained warm").set(
+                self.alloc.warm_pages)
         # which decode-attention path served this step (planner outcome,
         # surfaced on GET /metrics): 0=ring, 1=gather, 2=fused
         m.gauge("engine_attn_path",
@@ -1099,13 +1275,15 @@ class ServingEngine:
             if self.paged and (
                     self._required_pages(cand)
                     + sum(self._reserve.values())
-                    > self.alloc.pages_free):
+                    > self.alloc.pages_free + self.alloc.warm_pages):
                 break               # pool too full — wait for evicts
+                                    # (warm pages count as supply: the
+                                    # allocator reclaims them on demand)
             del self._waiting[idx]
             req = cand
             t0 = time.perf_counter()
-            if self.paged:
-                state, slot, d = self._admit_paged(
+            if self.chunked:
+                state, slot, d = self._admit_chunked(
                     state, req, i, t0, pending)
                 state_dirty |= d
             else:
@@ -1132,8 +1310,8 @@ class ServingEngine:
                 "requests admitted into a slot").inc(admitted)
 
         # -- advance chunked prefills ------------------------------
-        # (pf_stream gates out whole-prompt slots still waiting on
-        # the batched first-token flush below)
+        # (pf_stream gates out warm full-hit slots, which activated
+        # at admit with nothing left to compute)
         for i, s in enumerate(slots):
             if s is not None and s.phase == "prefill" \
                     and s.pf_stream is not None:
@@ -1196,49 +1374,68 @@ class ServingEngine:
                     ptok[i, j + 1] = int(props[j])
                     ppos[i, j + 1] = int(pos[i]) + j + 1
                 txns[i] = []
-                state, d = self._ensure_pages(
-                    state, i,
-                    [p % self.cache_len for p in
-                     range(int(pos[i]), int(pos[i]) + n + 1)],
-                    txn=txns[i])
-                state_dirty |= d
-            report.peak_pages = max(report.peak_pages,
-                                    self.alloc.pages_in_use)
+                if self.paged:
+                    state, d = self._ensure_pages(
+                        state, i,
+                        [p % self.cache_len for p in
+                         range(int(pos[i]), int(pos[i]) + n + 1)],
+                        txn=txns[i])
+                    state_dirty |= d
+            if self.paged:
+                report.peak_pages = max(report.peak_pages,
+                                        self.alloc.pages_in_use)
             if state_dirty:
                 state = self._constrain_state(state)
                 state_dirty = False
-            step_tables = self._tables.copy()
-            for i, s in enumerate(slots):
-                if s is None or s.phase != "active":
-                    step_tables[i] = -1
-            res = serve(self.params, state, {
+            vinputs = {
                 "tokens": jnp.asarray(ptok),
                 "positions": jnp.asarray(ppos),
-                "tables": jnp.asarray(step_tables),
-            })
+            }
+            if self.paged:
+                step_tables = self._tables.copy()
+                for i, s in enumerate(slots):
+                    if s is None or s.phase != "active":
+                        step_tables[i] = -1
+                vinputs["tables"] = jnp.asarray(step_tables)
+            res = serve(self.params, state, vinputs)
             state = res["state"]
             nxt = np.asarray(res["next"])          # (B, C)
             dt = time.perf_counter() - t0
             report.decode_s += dt
             decode_dt = dt
             emitted_total = 0
+            # exact greedy acceptance: draft j survives iff it equals
+            # the target's own argmax at position j-1; the first
+            # mismatch position contributes the target's choice as the
+            # bonus token
+            accepted: Dict[int, int] = {}
             for i in active:
-                s = slots[i]
-                # exact greedy acceptance: draft j survives iff it
-                # equals the target's own argmax at position j-1;
-                # the first mismatch position contributes the
-                # target's choice as the bonus token
                 a = 0
                 while a < n_drafts[i] and \
                         int(ptok[i, a + 1]) == int(nxt[i, a]):
                     a += 1
+                accepted[i] = a
+            carries = res.get("carries")
+            if carries is not None:
+                # recurrent families: commit each row's carry at its
+                # accepted frontier (checkpoint 1 + accepted consumed
+                # positions; 0 restores inactive rows untouched)
+                sel = np.zeros(self.max_batch, np.int32)
+                for i in active:
+                    sel[i] = accepted[i] + 1
+                state = self._apply_carry_selection(state, carries, sel)
+                state_dirty = True
+            for i in active:
+                s = slots[i]
+                a = accepted[i]
                 emitted = [int(nxt[i, j]) for j in range(a + 1)]
                 report.accepted_tokens += a
-                state, d = self._rollback_pages(
-                    state, i, txns[i],
-                    ((int(pos[i]) + a) % self.cache_len)
-                    // self.page_size)
-                state_dirty |= d
+                if self.paged:
+                    state, d = self._rollback_pages(
+                        state, i, txns[i],
+                        ((int(pos[i]) + a) % self.cache_len)
+                        // self.page_size)
+                    state_dirty |= d
                 emitted_total += len(emitted)
                 s.tokens.extend(emitted)
                 ev.emitted.setdefault(s.req.rid, []).extend(emitted)
@@ -1280,6 +1477,13 @@ class ServingEngine:
             "tokens": jnp.asarray(tok),
             "pos": jnp.asarray(pos),
         }
+        if self._needs_active:
+            # a decode step must not advance the recurrent carries of
+            # rows that are free or still mid-chunked-prefill
+            act = np.zeros(self.max_batch, bool)
+            for i in active:
+                act[i] = True
+            inputs["active"] = jnp.asarray(act)
         if self.paged:
             # non-active rows (free, or mid-chunked-prefill) are
             # masked to -1: their stale tok/pos writes redirect to

@@ -363,25 +363,42 @@ def reset_blocks(pool: PagedKVCache, blocks: Sequence[int]) -> PagedKVCache:
 # ---------------------------------------------------------------------------
 
 class BlockAllocator:
-    """Ref-counted physical-block allocator with a prefix-sharing index.
+    """Ref-counted physical-block allocator with a prefix-sharing index and
+    cross-request warm-prefix retention.
 
     Pure host-side bookkeeping: the engine's admit/evict scheduler drives
     alloc/free, and the chain-hash ``lookup``/``publish`` index maps
     page-aligned prompt-prefix content to physical blocks so identical
     prefixes across slots share pages (ref > 1) until the first divergent
     write copy-on-writes them apart (:meth:`cow`).
+
+    With a nonzero ``warm_bytes`` budget, a *published* block whose
+    refcount drops to 0 is not freed — it parks in a warm LRU (its index
+    entry stays live), so a returning prompt re-adopts its prefix chain
+    with zero prefill work. Warm blocks are reclaimed coldest-first when
+    the budget overflows or the free list runs dry; reclaimed block ids
+    accumulate in :meth:`take_reclaimed` so the engine can wipe their
+    stale pos tags before reuse (warm blocks skip the decref-time wipe —
+    their content IS the cache).
     """
 
-    def __init__(self, num_blocks: int, page_size: int):
+    def __init__(self, num_blocks: int, page_size: int, *,
+                 warm_bytes: int = 0, block_bytes: int = 1):
         if num_blocks < 2:
             raise ValueError("need at least 2 blocks (block 0 is the null "
                              "block)")
         self.num_blocks = int(num_blocks)
         self.page_size = int(page_size)
+        self.warm_bytes = int(warm_bytes)
+        self.block_bytes = max(1, int(block_bytes))
         self._free = collections.deque(range(1, num_blocks))
         self._ref: dict = {}          # bid -> refcount (live blocks only)
         self._index: dict = {}        # prefix key -> bid
         self._key_of: dict = {}       # bid -> prefix key
+        self._meta: dict = {}         # prefix key -> cached payload
+        self._warm = collections.OrderedDict()   # bid -> key, LRU order
+        self._reclaimed: List[int] = []          # warm blocks freed, tags
+                                                 # not yet wiped on device
 
     # -- capacity ---------------------------------------------------------
     @property
@@ -392,11 +409,54 @@ class BlockAllocator:
     def pages_free(self) -> int:
         return len(self._free)
 
+    @property
+    def warm_pages(self) -> int:
+        return len(self._warm)
+
+    @property
+    def warm_bytes_used(self) -> int:
+        return len(self._warm) * self.block_bytes
+
     def refcount(self, bid: int) -> int:
         return self._ref.get(bid, 0)
 
+    def is_warm(self, bid: int) -> bool:
+        return bid in self._warm
+
     # -- alloc / free -----------------------------------------------------
+    def _drop_key(self, bid: int) -> None:
+        key = self._key_of.pop(bid, None)
+        if key is not None:
+            self._index.pop(key, None)
+            self._meta.pop(key, None)
+
+    def _reclaim_warm(self) -> Optional[int]:
+        """Free the coldest warm block; returns its id (or None)."""
+        if not self._warm:
+            return None
+        bid, _key = self._warm.popitem(last=False)
+        self._drop_key(bid)
+        self._free.append(bid)
+        self._reclaimed.append(bid)
+        return bid
+
+    def take_reclaimed(self) -> List[int]:
+        """Warm blocks freed since the last call — the engine must wipe
+        their pos tags (``reset_blocks``) before they are written again."""
+        out, self._reclaimed = self._reclaimed, []
+        return out
+
+    def purge_warm(self) -> List[int]:
+        """Drop every warm block back to the free list (run boundaries,
+        property tests). Returns the purged block ids."""
+        purged = []
+        while self._warm:
+            purged.append(self._reclaim_warm())
+        return purged
+
     def alloc(self) -> int:
+        if not self._free:
+            self._reclaim_warm()
         if not self._free:
             raise RuntimeError(
                 f"KV block pool exhausted ({self.num_blocks - 1} usable "
@@ -412,14 +472,22 @@ class BlockAllocator:
 
     def decref(self, bid: int) -> bool:
         """Drop one reference; returns True when the block was freed (the
-        caller must then wipe its tags via :func:`reset_blocks`)."""
+        caller must then wipe its tags via :func:`reset_blocks`). A
+        published block under a nonzero warm budget is *retained* instead
+        (returns False — its content stays adoptable); the coldest warm
+        blocks are reclaimed if the byte budget would overflow."""
         self._ref[bid] -= 1
         if self._ref[bid]:
             return False
         del self._ref[bid]
-        key = self._key_of.pop(bid, None)
-        if key is not None:
-            self._index.pop(key, None)
+        key = self._key_of.get(bid)
+        if key is not None and self.warm_bytes >= self.block_bytes:
+            while self.warm_bytes_used + self.block_bytes > self.warm_bytes:
+                self._reclaim_warm()
+            self._warm[bid] = key
+            self._warm.move_to_end(bid)
+            return False
+        self._drop_key(bid)
         self._free.append(bid)
         return True
 
@@ -443,11 +511,27 @@ class BlockAllocator:
         return self._index.get(key)
 
     def lookup(self, key: str) -> Optional[int]:
-        """Find a published block for ``key`` and take a reference on it."""
+        """Find a published block for ``key`` and take a reference on it.
+        A warm (refcount-0, retained) block is adopted back to live."""
         bid = self._index.get(key)
-        if bid is not None:
+        if bid is None:
+            return None
+        if bid in self._warm:
+            del self._warm[bid]
+            self._ref[bid] = 1
+        else:
             self.incref(bid)
         return bid
+
+    # -- first-token metadata --------------------------------------------
+    def set_meta(self, key: str, value) -> None:
+        """Attach a payload (the engine caches the first decoded token) to
+        a *published* chain key; dropped whenever the key is."""
+        if key in self._index:
+            self._meta[key] = value
+
+    def meta(self, key: str):
+        return self._meta.get(key)
 
     def publish(self, key: str, bid: int) -> None:
         """Register ``bid``'s content under ``key`` (first writer wins; a
@@ -466,6 +550,7 @@ class BlockAllocator:
         key = self._key_of.pop(bid, None)
         if key is not None:
             self._index.pop(key, None)
+            self._meta.pop(key, None)
 
 
 # ---------------------------------------------------------------------------

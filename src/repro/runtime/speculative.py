@@ -129,19 +129,22 @@ class DraftModelProposer(Proposer):
     re-feed their last (token, position) — a same-slot ring overwrite
     with identical content — which keeps the per-step batch dense.
 
-    Only attention-state families (``T.CHUNKABLE_FAMILIES``) qualify:
-    the re-feed/rewind discipline relies on cache writes being keyed by
-    position (recurrent state mutation is not idempotent).
+    Recurrent carry families (``T.CARRY_FAMILIES``) are refused: the
+    re-feed/rewind discipline relies on cache writes being keyed by
+    position, and a draft's own wkv/ssm state mutation is not idempotent
+    (the *target* side handles carries via verify-step checkpoints, but
+    the draft decodes token by token with no checkpoint to rewind to).
     """
 
     name = "draft"
 
     def __init__(self, cfg: ModelConfig, params=None, *, seed: int = 1):
-        if cfg.family not in T.CHUNKABLE_FAMILIES:
+        if cfg.family in T.CARRY_FAMILIES:
             raise ValueError(
-                f"draft speculation needs an attention-state family "
-                f"{T.CHUNKABLE_FAMILIES}, not {cfg.family!r} (its rewind "
-                f"discipline is only idempotent for position-keyed caches)")
+                f"draft speculation cannot use a {cfg.family!r} draft — "
+                f"recurrent carry families {T.CARRY_FAMILIES} cannot "
+                f"rewind rejected drafts (cache writes must be keyed by "
+                f"position); use an attention-state draft or ngram")
         self.cfg = cfg
         if params is None:
             params = T.init_params(jax.random.PRNGKey(seed), cfg)
@@ -293,13 +296,9 @@ def validate_speculate(speculate: Optional[str], spec_k: int, *,
             f"the last emitted token plus spec_k drafts per step")
     if not paged:
         raise ValueError(
-            f"--speculate {name!r} requires the paged KV cache (rollback "
-            f"is allocator-level); drop --ring")
-    if cfg.family not in T.CHUNKABLE_FAMILIES:
-        raise ValueError(
-            f"--speculate {name!r} needs an attention-state family "
-            f"{T.CHUNKABLE_FAMILIES}, not {cfg.family!r} — the batched "
-            f"verify step rides the chunked-prefill path")
+            f"--speculate {name!r} requires the paged/chunked engine "
+            f"(rollback is allocator-level and verify checkpoints carries "
+            f"through the chunked path); drop --ring")
     if cfg.sliding_window and spec_k >= cfg.sliding_window:
         raise ValueError(
             f"--spec-k {spec_k} must be smaller than the sliding window "

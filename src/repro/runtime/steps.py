@@ -120,16 +120,18 @@ def make_prefill_step(cfg: ModelConfig, cache_len: int):
 def make_serve_step(cfg: ModelConfig, *, cache_len: int = 0,
                     kv_format: str = "kv_fp16",
                     attn_path: str = "gather"):
-    """serve_step(params, inputs={state, tokens, pos, [tables]}) — one
-    decode step. When ``inputs`` carries per-slot block ``tables`` the KV
-    state is the paged pool, ``cache_len``/``kv_format`` select the
+    """serve_step(params, inputs={state, tokens, pos, [tables], [active]})
+    — one decode step. When ``inputs`` carries per-slot block ``tables``
+    the KV state is the paged pool, ``cache_len``/``kv_format`` select the
     slot-window length and KV storage format, and ``attn_path`` the
-    planned decode-attention path (see runtime/kvcache.py)."""
+    planned decode-attention path (see runtime/kvcache.py). ``active``
+    (B,) bool masks recurrent-carry writes for rows that are mid chunked
+    prefill (carry families on the chunked engine only)."""
     def serve_step(params, inputs):
         logits, state = T.decode_step(
             params, cfg, inputs["state"], inputs["tokens"], inputs["pos"],
-            tables=inputs.get("tables"), cache_len=cache_len,
-            kv_format=kv_format, attn_path=attn_path)
+            tables=inputs.get("tables"), active=inputs.get("active"),
+            cache_len=cache_len, kv_format=kv_format, attn_path=attn_path)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return {"next": next_tok, "logits": logits, "state": state}
     return serve_step
@@ -137,37 +139,45 @@ def make_serve_step(cfg: ModelConfig, *, cache_len: int = 0,
 
 def make_prefill_chunk_step(cfg: ModelConfig, cache_len: int, *,
                             kv_format: str = "kv_fp16"):
-    """chunk_step(params, state, inputs={h, positions, table}) — one
-    chunked-prefill step for one slot (see T.prefill_chunk_step): scatters
-    the chunk's K/V into the slot's pooled pages and returns the updated
-    state plus last-valid-position logits (used when the final chunk
-    completes the prompt). ``state`` is its own argument so the block
-    pool — the largest serving tensor — can be donated without dragging
-    the small non-donatable chunk inputs along."""
+    """chunk_step(params, state, inputs={h, positions, slot, [table]}) —
+    one chunked-prefill step for one slot (see T.prefill_chunk_step):
+    scatters the chunk's K/V into the slot's pooled pages (attention
+    families — ``table`` absent for attention-free rwkv), threads the
+    slot's recurrent carries / cross-KV through by the ``slot`` row index,
+    and returns the updated state plus last-valid-position logits (used
+    when the final chunk completes the prompt). ``state`` is its own
+    argument so the block pool — the largest serving tensor — can be
+    donated without dragging the small non-donatable chunk inputs along."""
     def chunk_step(params, state, inputs):
         logits, state = T.prefill_chunk_step(
             params, cfg, state, inputs["h"], inputs["positions"],
-            inputs["table"], cache_len=cache_len, kv_format=kv_format)
+            inputs.get("table"), inputs["slot"],
+            cache_len=cache_len, kv_format=kv_format)
         return {"logits": logits, "state": state}
     return chunk_step
 
 
 def make_verify_step(cfg: ModelConfig, cache_len: int, *,
                      kv_format: str = "kv_fp16"):
-    """verify(params, state, inputs={tokens, positions, tables}) — one
+    """verify(params, state, inputs={tokens, positions, [tables]}) — one
     batched speculative-verify step (see T.verify_step): scores the last
     emitted token plus up to C-1 draft tokens for every slot in one
     forward pass and returns the per-position greedy choice. ``next`` is
     the device-side argmax over *all* (slot, position) cells, so the host
     syncs one (B, C) int array per step regardless of batch or draft
     length. ``state`` is its own (donatable) argument, as in the chunked
-    prefill step."""
+    prefill step. Carry families additionally return ``carries`` — the
+    per-position carry checkpoints the engine selects the accepted
+    frontier from (see T.verify_step)."""
     def verify(params, state, inputs):
-        logits, state = T.verify_step(
+        logits, state, carries = T.verify_step(
             params, cfg, state, inputs["tokens"], inputs["positions"],
-            inputs["tables"], cache_len=cache_len, kv_format=kv_format)
+            inputs.get("tables"), cache_len=cache_len, kv_format=kv_format)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return {"next": next_tok, "logits": logits, "state": state}
+        out = {"next": next_tok, "logits": logits, "state": state}
+        if carries is not None:
+            out["carries"] = carries
+        return out
     return verify
 
 
@@ -195,6 +205,8 @@ def serve_input_shardings(inputs_abstract, cfg, mesh):
     }
     if "tables" in inputs_abstract:       # paged: (B, pages_per_slot)
         out["tables"] = shd.data_shardings(inputs_abstract["tables"], mesh)
+    if "active" in inputs_abstract:       # carry families, chunked engine
+        out["active"] = shd.data_shardings(inputs_abstract["active"], mesh)
     return out
 
 
@@ -275,11 +287,8 @@ def jit_prefill_chunk_step(cfg, mesh, cache_len, params_abstract,
     fn = make_prefill_chunk_step(cfg, cache_len, kv_format=kv_format)
     pshard = shd.param_shardings(params_abstract, mesh, fsdp=fsdp_serve)
     sshard = shd.decode_state_shardings(inputs_abstract["state"], cfg, mesh)
-    ishard = {
-        "h": shd.data_shardings(inputs_abstract["h"], mesh),
-        "positions": shd.data_shardings(inputs_abstract["positions"], mesh),
-        "table": shd.data_shardings(inputs_abstract["table"], mesh),
-    }
+    ishard = {k: shd.data_shardings(v, mesh)
+              for k, v in inputs_abstract.items() if k != "state"}
     return jax.jit(
         fn,
         in_shardings=(pshard, sshard, ishard),
@@ -303,20 +312,35 @@ def jit_verify_step(cfg, mesh, cache_len, params_abstract,
     fn = make_verify_step(cfg, cache_len, kv_format=kv_format)
     pshard = shd.param_shardings(params_abstract, mesh, fsdp=fsdp_serve)
     sshard = shd.decode_state_shardings(inputs_abstract["state"], cfg, mesh)
-    ishard = {
-        "tokens": shd.data_shardings(inputs_abstract["tokens"], mesh),
-        "positions": shd.data_shardings(inputs_abstract["positions"], mesh),
-        "tables": shd.data_shardings(inputs_abstract["tables"], mesh),
-    }
+    ishard = {k: shd.data_shardings(v, mesh)
+              for k, v in inputs_abstract.items() if k != "state"}
     B = inputs_abstract["tokens"].shape[0]
     baxis = shd.batch_axis_entry(B, mesh)
+    oshard = {
+        "next": NamedSharding(mesh, P(baxis, None)),
+        "logits": NamedSharding(mesh, P(baxis, None, None)),
+        "state": sshard,
+    }
+    if cfg.family in T.CARRY_FAMILIES:
+        # carries are (L, B, C+1, ...) checkpoint stacks — batch on axis 1
+        out_abs = jax.eval_shape(
+            fn, params_abstract, inputs_abstract["state"], ishard_inputs(
+                inputs_abstract))
+
+        def cshard(leaf):
+            spec = [None] * leaf.ndim
+            spec[1] = baxis
+            return NamedSharding(mesh, P(*spec))
+
+        oshard["carries"] = jax.tree.map(cshard, out_abs["carries"])
     return jax.jit(
         fn,
         in_shardings=(pshard, sshard, ishard),
-        out_shardings={
-            "next": NamedSharding(mesh, P(baxis, None)),
-            "logits": NamedSharding(mesh, P(baxis, None, None)),
-            "state": sshard,
-        },
+        out_shardings=oshard,
         donate_argnums=(1,),
     )
+
+
+def ishard_inputs(inputs_abstract):
+    """The non-state portion of a (params, state, inputs) step's bundle."""
+    return {k: v for k, v in inputs_abstract.items() if k != "state"}

@@ -1,8 +1,10 @@
 """Paged KV cache tests: block allocator (alloc/free/ref-count, CoW,
-eviction), prefix-share keys, pool device ops, KV quantization formats,
-and the end-to-end parity suite — paged engine decode token-identical to
-the ring engine on danube + internvl2, with and without prefix sharing,
-single-device and TP=2xDP on 8 fake devices (subprocess)."""
+eviction, warm-prefix LRU retention), prefix-share keys, pool device ops,
+KV quantization formats, and the end-to-end parity suite — chunked
+prefill (the single prefill path, every architecture family)
+token-identical to the ring engine, warm re-admits running zero prefill
+steps, with and without prefix sharing, single-device and TP×DP on 8
+fake devices (subprocess)."""
 import dataclasses
 import json
 import os
@@ -92,6 +94,83 @@ def test_allocator_share_publish_cow():
     # freeing the published block drops its index entry
     assert a.decref(bid)
     assert a.peek("k0") is None
+
+
+def test_allocator_warm_retention_adopt_and_repark():
+    """A published block decref'd to 0 under a warm budget parks instead
+    of freeing; lookup adopts it back to live (ref 1) with its first-token
+    meta intact; releasing again re-parks it."""
+    a = kvc.BlockAllocator(6, 4, warm_bytes=4 * 8, block_bytes=8)
+    bid = a.alloc()
+    a.publish("k0", bid)
+    a.set_meta("k0", 42)
+    assert not a.decref(bid)                      # retained, not freed
+    assert a.is_warm(bid) and a.warm_pages == 1
+    assert a.pages_in_use == 0                    # warm ≠ live
+    got = a.lookup("k0")
+    assert got == bid and not a.is_warm(bid) and a.refcount(bid) == 1
+    assert a.meta("k0") == 42
+    assert not a.decref(bid)                      # parks again
+    assert a.is_warm(bid)
+    # zero budget → plain free semantics (and the key drops)
+    z = kvc.BlockAllocator(6, 4)
+    b2 = z.alloc()
+    z.publish("k0", b2)
+    assert z.decref(b2) and z.peek("k0") is None
+
+
+def test_allocator_warm_budget_never_exceeded():
+    """Churning publishes/releases through a 2-block byte budget: the warm
+    set never overflows it, and overflow evicts coldest-first."""
+    a = kvc.BlockAllocator(10, 4, warm_bytes=2 * 8, block_bytes=8)
+    parked = []
+    for i in range(6):
+        bid = a.alloc()
+        a.publish(f"k{i}", bid)
+        a.decref(bid)
+        parked.append(bid)
+        assert a.warm_bytes_used <= a.warm_bytes
+    assert a.warm_pages == 2
+    # the two survivors are the warmest (most recently parked)
+    assert all(a.is_warm(b) for b in parked[-2:])
+    assert not any(a.is_warm(b) for b in parked[:-2])
+    # evicted ids surfaced for device-side tag wipes, oldest first
+    assert a.take_reclaimed() == parked[:-2]
+    assert a.take_reclaimed() == []
+
+
+def test_allocator_alloc_reclaims_coldest_warm_block():
+    """When the free list runs dry, alloc() steals the coldest warm block
+    rather than raising — warm pages are capacity, not a leak."""
+    a = kvc.BlockAllocator(4, 4, warm_bytes=8 * 8, block_bytes=8)
+    b1, b2, b3 = a.alloc(), a.alloc(), a.alloc()  # pool exhausted (3 usable)
+    a.publish("k1", b1)
+    a.publish("k2", b2)
+    a.decref(b1)
+    a.decref(b2)                                  # b1 older than b2
+    assert a.pages_free == 0 and a.warm_pages == 2
+    fresh = a.alloc()                             # reclaims b1 (coldest)
+    assert fresh == b1 and not a.is_warm(b1)
+    assert a.peek("k1") is None and a.peek("k2") == b2
+    assert a.take_reclaimed() == [b1]
+    a.decref(b3)                                  # unpublished → plain free
+
+
+def test_allocator_purge_warm_empties_pool():
+    """purge_warm at run boundaries returns every warm page to the free
+    list: pool exactly empty, all ids surfaced for tag wipes."""
+    a = kvc.BlockAllocator(8, 4, warm_bytes=16 * 8, block_bytes=8)
+    for i in range(5):
+        bid = a.alloc()
+        a.publish(f"k{i}", bid)
+        a.decref(bid)
+    assert a.warm_pages == 5
+    purged = a.purge_warm()
+    assert len(purged) == 5 and a.warm_pages == 0
+    assert a.pages_in_use == 0
+    assert a.pages_free == a.num_blocks - 1       # exactly empty
+    assert sorted(a.take_reclaimed()) == sorted(purged)
+    assert all(a.peek(f"k{i}") is None for i in range(5))
 
 
 def test_page_keys_prefix_property():
@@ -241,22 +320,29 @@ def test_paged_engine_parity(arch, chunk):
 
 
 @pytest.mark.parametrize("family_arch", ["whisper-small", "hymba-1.5b",
-                                         "olmoe-1b-7b"])
-def test_paged_engine_parity_fallback_families(family_arch):
-    """Recurrent / enc-dec / MoE families ride the whole-prompt fallback
-    into the pool and still decode token-identically."""
+                                         "olmoe-1b-7b", "rwkv6-7b"])
+def test_paged_engine_parity_all_families(family_arch):
+    """Recurrent / enc-dec / MoE families prefill through the same chunked
+    path as everyone else (carries threaded per chunk) and decode
+    token-identically to the ring engine — there is no whole-prompt
+    fallback any more. MoE needs full expert capacity for exact parity
+    (capacity dropping is routing-batch-shaped; see prefill_chunk_step)."""
     cfg = dataclasses.replace(configs.get_reduced(family_arch),
                               w4a16_strategy="xla")
+    if cfg.num_experts:
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=64.0)
     P, G, n = 8, 3, 2
     params = _params(cfg)
-    paged = ServingEngine(cfg, params, max_batch=n, max_prompt_len=P,
-                          max_new_tokens=G, page_size=4)
-    ring = ServingEngine(cfg, params, max_batch=n, max_prompt_len=P,
-                         max_new_tokens=G, paged=False,
-                         cache_len=paged.cache_len)
-    want = ring.run(_requests(cfg, n, P, G)).results
-    got = paged.run(_requests(cfg, n, P, G)).results
-    assert got == want
+    for chunk in (None, 3):
+        paged = ServingEngine(cfg, params, max_batch=n, max_prompt_len=P,
+                              max_new_tokens=G, page_size=4,
+                              prefill_chunk=chunk)
+        ring = ServingEngine(cfg, params, max_batch=n, max_prompt_len=P,
+                             max_new_tokens=G, paged=False,
+                             cache_len=paged.cache_len)
+        want = ring.run(_requests(cfg, n, P, G)).results
+        got = paged.run(_requests(cfg, n, P, G)).results
+        assert got == want, f"chunk={chunk}"
 
 
 @pytest.mark.parametrize("chunk,arrival,min_saved", [
@@ -294,8 +380,12 @@ def test_prefix_sharing_reduces_pages_and_keeps_tokens(chunk, arrival,
 def test_cow_on_divergent_write():
     """Two slots share a partial prompt page; the first decode write into
     it must copy-on-write — generations diverge, prompt context doesn't."""
+    # full expert capacity: chunked prefill's padded routing batch must
+    # not drop different tokens than the ring reference (MoE note in
+    # prefill_chunk_step)
     cfg = dataclasses.replace(configs.get_reduced("olmoe-1b-7b"),
-                              w4a16_strategy="xla")
+                              w4a16_strategy="xla",
+                              moe_capacity_factor=64.0)
     P, G, n = 6, 4, 2                     # 6 % 4 → partial last page
     params = _params(cfg)
     eng = ServingEngine(cfg, params, max_batch=n, max_prompt_len=P,
@@ -318,8 +408,10 @@ def test_cow_on_divergent_write():
 def test_paged_slot_reuse_no_leak():
     """Continuous batching with more requests than slots: freed blocks are
     recycled across requests without leaking stale context."""
+    # full expert capacity — same MoE chunk-vs-ring caveat as above
     cfg = dataclasses.replace(configs.get_reduced("olmoe-1b-7b"),
-                              w4a16_strategy="xla")
+                              w4a16_strategy="xla",
+                              moe_capacity_factor=64.0)
     P, G, n = 8, 3, 5
     params = _params(cfg)
     eng = ServingEngine(cfg, params, max_batch=2, max_prompt_len=P,
@@ -336,6 +428,70 @@ def test_paged_slot_reuse_no_leak():
                          cache_len=eng.cache_len)
     assert report.results == ring.run(
         _requests(cfg, n, P, G, arrival_every=1)).results
+
+
+# ---------------------------------------------------------------------------
+# warm prefix cache (engine level)
+# ---------------------------------------------------------------------------
+
+def test_warm_prefix_readmit_runs_zero_prefill_steps():
+    """A returning page-aligned prompt under a nonzero warm budget adopts
+    its whole chain + cached first token at admit: zero chunk steps, one
+    warm hit, tokens identical to both the cold engine and the ring
+    reference — the retention acceptance criterion."""
+    cfg = dataclasses.replace(configs.get_reduced("starcoder2-7b"),
+                              w4a16_strategy="xla")
+    P, G = 8, 3
+    params = _params(cfg)
+
+    def reqs():
+        # request 1 re-sends request 0's prompt long after its release
+        return _requests(cfg, 2, P, G, same_prompt=True, arrival_every=12)
+
+    warm = ServingEngine(cfg, params, max_batch=2, max_prompt_len=P,
+                         max_new_tokens=G, page_size=4, prefill_chunk=4,
+                         warm_cache_mb=1.0)
+    wrep = warm.run(reqs())
+    cold = ServingEngine(cfg, params, max_batch=2, max_prompt_len=P,
+                         max_new_tokens=G, page_size=4, prefill_chunk=4)
+    crep = cold.run(reqs())
+    ring = ServingEngine(cfg, params, max_batch=2, max_prompt_len=P,
+                         max_new_tokens=G, paged=False,
+                         cache_len=warm.cache_len)
+    want = ring.run(reqs()).results
+    assert wrep.results == want and crep.results == want
+    assert wrep.warm_hits == 1 and wrep.warm_misses == 1
+    assert crep.warm_hits == 0 and crep.warm_misses == 0
+    # the re-admit skipped ALL ceil(P/chunk)=2 of its chunk steps (one of
+    # which the cold engine overlaps with the admit step)
+    assert wrep.prefill_steps_saved == 2
+    assert wrep.steps < crep.steps
+    # run boundaries stay cold: start() purges the warm set
+    assert warm.run(reqs()).results == want
+
+
+def test_warm_budget_is_respected_and_counts_misses():
+    """Distinct prompts churning through a one-chain budget: retention
+    never exceeds warm_bytes, every admit is a miss, and the engine ends
+    with the warm pages still accounted (not leaked, not live)."""
+    cfg = dataclasses.replace(configs.get_reduced("starcoder2-7b"),
+                              w4a16_strategy="xla")
+    P, G, n = 8, 3, 3
+    params = _params(cfg)
+    probe = ServingEngine(cfg, params, max_batch=1, max_prompt_len=P,
+                          max_new_tokens=G, page_size=4)
+    one_chain_mb = probe.alloc.block_bytes * (P // 4) / (1 << 20)
+    eng = ServingEngine(cfg, params, max_batch=1, max_prompt_len=P,
+                        max_new_tokens=G, page_size=4, prefill_chunk=4,
+                        warm_cache_mb=one_chain_mb)
+    rep = eng.run(_requests(cfg, n, P, G, arrival_every=1))
+    assert sorted(rep.results) == list(range(n))
+    assert rep.warm_hits == 0 and rep.warm_misses == n
+    assert eng.alloc.warm_bytes_used <= eng.alloc.warm_bytes
+    assert eng.alloc.warm_pages <= P // 4       # at most one chain parked
+    assert eng.alloc.pages_in_use == 0
+    assert (eng.alloc.pages_free + eng.alloc.warm_pages
+            == eng.num_pages - 1)
 
 
 def test_kv8_channel_engine_close():
@@ -573,6 +729,68 @@ def test_sharded_paged_engine_parity():
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     env["JAX_PLATFORMS"] = "cpu"
     res = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert res.returncode == 0, res.stderr[-3000:]
+    line = [l for l in res.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+    assert out and all(out.values()), {k: v for k, v in out.items() if not v}
+
+
+WARM_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.kernels import planning
+from repro.launch.mesh import make_local_mesh
+from repro.models import transformer as T
+from repro.runtime.engine import Request, ServingEngine
+
+P, G = 8, 4
+cfg = configs.get_reduced("h2o-danube-1.8b")     # w4a16_strategy="auto"
+key = jax.random.PRNGKey(0)
+params = T.quantize_params(T.init_params(key, cfg), cfg, min_size=0)
+toks = jax.random.randint(key, (P,), 0, cfg.vocab_size)
+
+
+def reqs():
+    # the same prompt returns long after the first holder released it
+    return [Request(rid=0, prompt=toks, max_new_tokens=G),
+            Request(rid=1, prompt=toks, max_new_tokens=G, arrival_step=14)]
+
+
+def run(mesh):
+    planning.PLAN_CACHE.clear()
+    eng = ServingEngine(cfg, params, mesh=mesh, max_batch=2,
+                        max_prompt_len=P, max_new_tokens=G, page_size=4,
+                        prefill_chunk=4, warm_cache_mb=1.0)
+    rep = eng.run(reqs())
+    return {str(k): v for k, v in sorted(rep.results.items())}, rep
+
+
+single, srep = run(None)
+sharded, mrep = run(make_local_mesh(data=2, model=4))
+out = {"match": sharded == single,
+       "single_hit": srep.warm_hits == 1,
+       "sharded_hit": mrep.warm_hits == 1,
+       "sharded_saved": mrep.prefill_steps_saved >= 1,
+       "sharded_fewer_steps": mrep.steps == srep.steps}
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_warm_prefix_readmit_parity():
+    """TP=4 x DP=2 warm re-admit: the returning prompt warm-hits on the
+    mesh too, skips its prefill steps, and stays token-identical to the
+    single-device warm engine."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    res = subprocess.run([sys.executable, "-c", WARM_SCRIPT], env=env,
                          capture_output=True, text=True, timeout=560)
     assert res.returncode == 0, res.stderr[-3000:]
     line = [l for l in res.stdout.splitlines() if l.startswith("RESULT ")][-1]

@@ -1,9 +1,10 @@
 """Speculative decoding tests: greedy token-identity parity vs the
 non-speculative paged engine (danube + internvl2 × {ngram, draft} ×
-{chunked prefill on/off}), allocator-level rollback of rejected drafts
-(txn unit tests + end-state property with an always-wrong proposer),
-up-front proposer validation, and the TP×DP subprocess parity case for
-the forced-8-device CI job."""
+{chunked prefill on/off}, plus ngram on the recurrent/enc-dec carry
+families via verify-step carry checkpoints), allocator-level rollback of
+rejected drafts (txn unit tests + end-state property with an
+always-wrong proposer), up-front proposer validation, and the TP×DP
+subprocess parity case for the forced-8-device CI job."""
 import dataclasses
 import json
 import os
@@ -57,6 +58,10 @@ def _requests(cfg, n, P, G):
             kw["prefix_embeds"] = jax.random.normal(
                 jax.random.fold_in(KEY, min(i, 1)),
                 (cfg.vision_prefix, cfg.d_model), cfg.dtype)
+        if cfg.family == "encdec":
+            kw["audio_embeds"] = jax.random.normal(
+                jax.random.fold_in(KEY, min(i, 1)),
+                (cfg.encoder_seq, cfg.d_model), cfg.dtype)
         prompt = rep if i < 2 else toks[i]
         reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=G,
                             arrival_step=i, **kw))
@@ -233,6 +238,25 @@ def test_rejected_drafts_leave_no_residue():
     assert int(pool.page_pos.max()) == -1
 
 
+@pytest.mark.parametrize("arch", ["rwkv6-7b", "hymba-1.5b",
+                                  "whisper-small"])
+def test_speculative_parity_carry_families(arch):
+    """Recurrent / enc-dec families speculate now: verify checkpoints the
+    wkv/ssm/conv carries per drafted position and the engine rewinds each
+    slot to its last accepted checkpoint. Ngram must stay token-identical
+    to plain chunked decode; a reject-everything proposer must too — every
+    one of its verify steps rewinds the carries to the pre-draft
+    checkpoint (accepted = 0), the hardest rewind case."""
+    cfg = _cfg(arch)
+    rep, _ = _run(arch, prefill_chunk=4, speculate="ngram")
+    assert rep.results == _baseline(arch, 4)
+    assert rep.accepted_tokens <= rep.proposed_tokens
+    wrong, _ = _run(arch, prefill_chunk=4,
+                    speculate=_AlwaysWrong(cfg.vocab_size), spec_k=3)
+    assert wrong.results == _baseline(arch, 4)
+    assert wrong.proposed_tokens > 0 and wrong.accepted_tokens == 0
+
+
 def test_scatter_chunks_matches_per_slot_scatter():
     """The batched verify-write path lands byte-identical K/V to B
     sequential scatter_chunk calls."""
@@ -267,15 +291,26 @@ def test_validate_speculate_refusals():
         spec.validate_speculate("ngram", 0, cfg=dense)
     with pytest.raises(ValueError, match="paged"):
         spec.validate_speculate("ngram", 4, cfg=dense, paged=False)
-    with pytest.raises(ValueError, match="family"):
-        spec.validate_speculate("ngram", 4,
-                                cfg=configs.get_reduced("whisper-small"))
     swa = configs.get_reduced("h2o-danube-1.8b")        # window=16
     with pytest.raises(ValueError, match="sliding window"):
         spec.validate_speculate("ngram", 16, cfg=swa)
+    # recurrent/enc-dec families validate: verify checkpoints their
+    # carries through the chunked path, so speculation is no longer a
+    # dense-family privilege
+    for arch in ("whisper-small", "rwkv6-7b", "hymba-1.5b"):
+        assert spec.validate_speculate(
+            "ngram", 4, cfg=configs.get_reduced(arch)) == "ngram"
     assert spec.validate_speculate("draft:layers=2", 4, cfg=dense) == "draft"
     assert spec.validate_speculate(None, 4, cfg=dense) is None
     assert spec.validate_speculate("off", 4, cfg=dense) is None
+
+
+def test_draft_proposer_refuses_carry_family_draft():
+    """The DRAFT side still refuses carry families: the draft decodes
+    token by token with no checkpoint to rewind a rejected run, unlike
+    the target's verify-step carry checkpoints."""
+    with pytest.raises(ValueError, match="rewind"):
+        spec.DraftModelProposer(configs.get_reduced("rwkv6-7b"))
 
 
 def test_serve_cli_refuses_bad_speculate():
