@@ -449,12 +449,14 @@ def bench_speculative(out_path: str = "BENCH_speculative.json") -> dict:
 # ---------------------------------------------------------------------------
 
 def bench_paged_attn(out_path: str = "BENCH_paged_attn.json") -> dict:
-    """Op-level decode-attention sweep: the dense ring read, the XLA
+    """Op-level paged-attention sweep: the dense ring read, the XLA
     block-table gather (two passes over the KV window), and the fused
-    Pallas kernel (one pass, in-VMEM dequant) on identical KV contents.
-    Wall rows are CPU-trend numbers (the fused kernel runs in interpret
-    mode off-TPU); the bytes/roofline columns are the decision metric —
-    the gather's HBM round-trip is what the fused path deletes."""
+    Pallas kernel (one pass, in-VMEM dequant) on identical KV contents —
+    at decode (q_len=1) plus the multi-query regimes (prefill chunks and
+    k+1 speculative verify). Wall rows are CPU-trend numbers (the fused
+    kernel runs in interpret mode off-TPU); the bytes/roofline columns
+    are the decision metric — the gather's per-call HBM window
+    materialization is what the fused path deletes."""
     import dataclasses
 
     from repro.core import quant as q
@@ -543,6 +545,7 @@ def bench_paged_attn(out_path: str = "BENCH_paged_attn.json") -> dict:
                     "ctx": ctx, "batch": B, "heads": Hq,
                     "kv_heads": Hkv, "head_dim": D, "page_size": ps,
                     "kv_partitions": S if path == "fused" else 1,
+                    "q_len": 1,
                     "us_per_step": round(us, 2),
                     "tok_per_s": round(B / (us / 1e6), 2),
                     "bytes_moved": int(gbytes),
@@ -551,6 +554,98 @@ def bench_paged_attn(out_path: str = "BENCH_paged_attn.json") -> dict:
                     "planner_pick_tpu": picks["tpu"],
                     "fused_vs_gather_maxdiff": maxdiff,
                 })
+
+    # multi-query regimes over the same pools: chunked prefill (q_len =
+    # the chunk, one slot per call) and speculative verify (q_len = k+1,
+    # full batch) — gather still materializes the whole window per call,
+    # so its bytes column is flat in q_len while the fused walk pays one
+    # pass + O(q_len) partials
+    from repro.kernels.paged_attention import fused_chunk_attention
+
+    for fmt_name in ("kv_fp16", "kv8_channel"):
+        quantized = q.get_kv_format(fmt_name).quantized
+        for regime, Br, C in (("prefill_chunk", 1, 32), ("verify", B, 5)):
+            for ctx in (128, 256, 512):
+                _, pool, tables, _, _, fmt = build(ctx, fmt_name)
+                tbl = tables[:Br]
+                start = ctx - C
+                positions = jnp.broadcast_to(
+                    start + jnp.arange(C, dtype=jnp.int32), (Br, C))
+                kk2 = jax.random.fold_in(key, 7 * ctx + C)
+                qmq = jax.random.normal(kk2, (Br, C, Hq, D), jnp.float32)
+
+                def rt(s, shape=(Br, C, Hkv, D)):
+                    x = jax.random.normal(jax.random.fold_in(kk2, s),
+                                          shape, jnp.float32)
+                    return q.kv_dequantize(*q.kv_quantize(x, fmt), fmt=fmt,
+                                           dtype=jnp.float32)
+
+                kseg, vseg = rt(1), rt(2)
+                problem = planning.AttentionProblem(
+                    B=Br, Hq=Hq, Hkv=Hkv, D=D, cache_len=ctx, page_size=ps,
+                    kv_format=fmt_name, paged=True, act_bytes=4, q_len=C)
+                # the Split-K degree the planner would actually run
+                # (occupancy-chosen, capped by the combine-traffic rule)
+                S = planning.plan_attention(problem,
+                                            path="fused").kv_partitions
+
+                def gather_fn(qq, ks=kseg, vs=vseg, po=pool, tb=tbl,
+                              pp=positions):
+                    win = kvc.gather_window(po, tb, fmt=fmt,
+                                            out_dtype=jnp.float32)
+                    wpos = jnp.where(win.pos < pp[:, :1], win.pos, -1)
+                    seq = attention.KVCache(
+                        k=jnp.concatenate([win.k, ks], axis=1),
+                        v=jnp.concatenate([win.v, vs], axis=1),
+                        pos=jnp.concatenate([wpos, pp], axis=1))
+                    return attention.prefix_chunk_attention(qq, seq, pp)
+
+                def fused_fn(qq, ks=kseg, vs=vseg, po=pool, tb=tbl,
+                             pp=positions, SS=S):
+                    return fused_chunk_attention(
+                        qq, ks, vs, po, tb, pp, fmt=fmt,
+                        out_dtype=jnp.float32, kv_partitions=SS)
+
+                fns = {"gather": jax.jit(gather_fn),
+                       "fused": jax.jit(fused_fn)}
+                outs = {p: fn(qmq) for p, fn in fns.items()}
+                maxdiff = float(jnp.max(jnp.abs(outs["fused"]
+                                                - outs["gather"])))
+                picks = {
+                    be: planning.plan_attention(
+                        dataclasses.replace(problem, backend=be)).path
+                    for be in ("cpu", "tpu")}
+                for path, fn in fns.items():
+                    us = _time(fn, qmq)
+                    gbytes = cm.paged_attn_bytes(
+                        path, Br, Hq, Hkv, D, ctx, act_bytes=4,
+                        quantized=quantized,
+                        kv_partitions=S if path == "fused" else 1,
+                        q_len=C)
+                    t_tpu = cm.attn_decode_time_tpu(
+                        path, Br, Hq, Hkv, D, ctx, act_bytes=4,
+                        quantized=quantized,
+                        kv_partitions=S if path == "fused" else 1,
+                        q_len=C)
+                    name = (f"paged_attn/{fmt_name}/{regime}"
+                            f"/ctx{ctx}/{path}")
+                    tok_s = Br * C / (us / 1e6)
+                    print(f"{name},{us:.1f},{tok_s:.1f}")
+                    cells.append({
+                        "name": name, "path": path, "kv_format": fmt_name,
+                        "regime": regime, "ctx": ctx, "batch": Br,
+                        "heads": Hq, "kv_heads": Hkv, "head_dim": D,
+                        "page_size": ps,
+                        "kv_partitions": S if path == "fused" else 1,
+                        "q_len": C,
+                        "us_per_step": round(us, 2),
+                        "tok_per_s": round(tok_s, 2),
+                        "bytes_moved": int(gbytes),
+                        "roofline_tpu_us": round(t_tpu * 1e6, 3),
+                        "planner_pick_cpu": picks["cpu"],
+                        "planner_pick_tpu": picks["tpu"],
+                        "fused_vs_gather_maxdiff": maxdiff,
+                    })
     blob = {"format": BENCH_FORMAT, "backend": jax.default_backend(),
             "cells": cells}
     with open(out_path, "w") as f:

@@ -223,41 +223,52 @@ def kv_bytes_per_token(Hkv: int, D: int, *, quantized: bool,
 
 def paged_attn_bytes(path: str, B: int, Hq: int, Hkv: int, D: int,
                      ctx: int, *, quantized: bool, act_bytes: int = 2,
-                     kv_partitions: int = 1) -> float:
-    """HBM bytes moved by one decode step of attention over a ctx-token
-    window, per path:
+                     kv_partitions: int = 1, q_len: int = 1) -> float:
+    """HBM bytes moved by one attention step of ``q_len`` queries per row
+    over a ctx-token window, per path:
 
     - ``ring``: dense fp16 ring buffer, read once (ring stores no
       quantized payloads).
     - ``gather``: pool read + the dequantized window *written to HBM and
-      read back* — the two-pass round-trip the fused kernel deletes.
-    - ``fused``: pool read once + O(S) combine partials.
+      read back* — the two-pass round-trip the fused kernel deletes. The
+      window materialization is charged in full regardless of ``q_len``:
+      a prefill chunk or verify step gathers exactly as many bytes as a
+      single decode token does.
+    - ``fused``: pool read once + O(S·q_len) combine partials.
+
+    For ``q_len > 1`` (chunked prefill / speculative verify) both paged
+    paths additionally stage the chunk's own quantize-roundtripped K/V
+    segment and read it back — identical work, charged to both.
     """
-    q_out = 2 * B * Hq * D * act_bytes              # q in, out back
+    q_out = 2 * B * q_len * Hq * D * act_bytes      # q in, out back
     window = B * ctx
+    dense_tok = 2 * act_bytes * Hkv * D             # one token's K+V raw
+    seg = 2 * B * q_len * dense_tok if q_len > 1 else 0
     if path == "ring":
-        return window * 2 * act_bytes * Hkv * D + q_out
+        return window * dense_tok + q_out
     pool = window * kv_bytes_per_token(Hkv, D, quantized=quantized,
                                        act_bytes=act_bytes)
     if path == "gather":
-        staged = window * 2 * act_bytes * Hkv * D   # dequantized window
-        return pool + 2 * staged + q_out            # write + read back
+        staged = window * dense_tok                 # dequantized window
+        return pool + 2 * staged + seg + q_out      # write + read back
     if path == "fused":
-        partials = kv_partitions * B * Hq * (D + 2) * 4 * 2
-        return pool + q_out + partials
+        partials = kv_partitions * B * q_len * Hq * (D + 2) * 4 * 2
+        return pool + seg + q_out + partials
     raise ValueError(f"unknown attention path {path!r} "
                      "(expected ring | gather | fused)")
 
 
 def attn_decode_time_tpu(path: str, B: int, Hq: int, Hkv: int, D: int,
                          ctx: int, *, quantized: bool, act_bytes: int = 2,
-                         kv_partitions: int = 1,
+                         kv_partitions: int = 1, q_len: int = 1,
                          spec: TPUv5eSpec = TPU_V5E) -> float:
-    """Roofline time of one decode-attention step: QK^T + PV flops vs the
-    path's HBM traffic. Decode is firmly bandwidth-bound (arithmetic
-    intensity ~1 flop/byte), so the bytes term decides the ranking."""
-    flops = 4 * B * Hq * D * ctx                    # QK^T + PV
+    """Roofline time of one attention step (``q_len`` queries per row):
+    QK^T + PV flops vs the path's HBM traffic. Decode and chunk-sized
+    prefill are both firmly bandwidth-bound (arithmetic intensity ~q_len
+    flops/byte at serving chunk sizes), so the bytes term decides the
+    ranking."""
+    flops = 4 * B * q_len * Hq * D * ctx            # QK^T + PV
     bytes_moved = paged_attn_bytes(
         path, B, Hq, Hkv, D, ctx, quantized=quantized,
-        act_bytes=act_bytes, kv_partitions=kv_partitions)
+        act_bytes=act_bytes, kv_partitions=kv_partitions, q_len=q_len)
     return max(flops / spec.flops, bytes_moved / spec.hbm_bw)

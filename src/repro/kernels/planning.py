@@ -839,8 +839,14 @@ def plan_for_params(params, M: int, *, refine: bool = False,
 
 @dataclasses.dataclass(frozen=True)
 class AttentionProblem:
-    """One decode-attention step: B query tokens against a ctx-token
-    cached window, Hq query heads over Hkv KV heads of dim D."""
+    """One paged-attention step: B rows of ``q_len`` query tokens each
+    against a ctx-token cached window, Hq query heads over Hkv KV heads
+    of dim D. ``q_len`` distinguishes the three serving regimes the fused
+    kernel covers — decode (1), speculative verify (k+1) and chunked
+    prefill (the chunk size) — and shifts the gather/fused tradeoff: the
+    gather path re-materializes the whole window per step regardless of
+    q_len, so its amortized cost collapses as q_len grows only for the
+    fused path."""
     B: int
     Hq: int
     Hkv: int
@@ -852,6 +858,7 @@ class AttentionProblem:
     paged: bool = True
     backend: str = "cpu"
     act_bytes: int = 2
+    q_len: int = 1
 
     @property
     def ctx(self) -> int:
@@ -887,13 +894,17 @@ def available_attn_paths() -> Tuple[str, ...]:
     return tuple(_ATTN_REGISTRY)
 
 
-def choose_kv_partitions(B: int, Hkv: int, pages: int) -> int:
+def choose_kv_partitions(B: int, Hkv: int, pages: int, *,
+                         q_tiles: int = 1) -> int:
     """Split-K over the page axis: decode attention runs at B·Hkv grid
     tiles, which underfills the chip exactly like the paper's K ≫ N GEMMs
     (Fig. 2) — partition the table until the cores fill, staying on a
-    power-of-2 divisor of the table length so partitions tile evenly."""
+    power-of-2 divisor of the table length so partitions tile evenly.
+    ``q_tiles`` is the multi-query kernel's Q-tile grid axis (1 for
+    decode): a chunk already fans out over B·Hkv·q_tiles tiles, so it
+    needs proportionally less page-axis splitting to fill the chip."""
     cores = num_cores()
-    tiles = max(1, B * Hkv)
+    tiles = max(1, B * Hkv * max(1, q_tiles))
     if tiles >= cores or pages < 2:
         return 1
     want = min(cores // tiles, pages)
@@ -901,6 +912,19 @@ def choose_kv_partitions(B: int, Hkv: int, pages: int) -> int:
     while s * 2 <= want and pages % (s * 2) == 0:
         s *= 2
     return s
+
+
+def choose_q_block(q_len: int, group: int, *, target: int = 128) -> int:
+    """Queries per Q-tile for the multi-query fused attention grid: the
+    largest divisor Tq of ``q_len`` with Tq·group rows ≤ ``target`` (the
+    sublane budget the q block and the (m, l, acc) scratch share). Decode
+    (q_len=1) degenerates to Tq=1; a C=32 chunk at GQA group 4 tiles as
+    one 128-row block."""
+    cap = max(1, target // max(1, group))
+    t = max(1, min(q_len, cap))
+    while q_len % t:
+        t -= 1
+    return t
 
 
 def _attn_quantized(problem: AttentionProblem) -> bool:
@@ -914,7 +938,8 @@ def _attn_pallas_factor(problem: AttentionProblem) -> float:
 def _cost_attn_ring(problem: AttentionProblem, plan: AttentionPlan) -> float:
     return costmodel.attn_decode_time_tpu(
         "ring", problem.B, problem.Hq, problem.Hkv, problem.D, problem.ctx,
-        quantized=False, act_bytes=problem.act_bytes)
+        quantized=False, act_bytes=problem.act_bytes,
+        q_len=problem.q_len)
 
 
 def _cost_attn_gather(problem: AttentionProblem,
@@ -922,7 +947,7 @@ def _cost_attn_gather(problem: AttentionProblem,
     return costmodel.attn_decode_time_tpu(
         "gather", problem.B, problem.Hq, problem.Hkv, problem.D,
         problem.ctx, quantized=_attn_quantized(problem),
-        act_bytes=problem.act_bytes)
+        act_bytes=problem.act_bytes, q_len=problem.q_len)
 
 
 def _cost_attn_fused(problem: AttentionProblem,
@@ -930,7 +955,7 @@ def _cost_attn_fused(problem: AttentionProblem,
     return costmodel.attn_decode_time_tpu(
         "fused", problem.B, problem.Hq, problem.Hkv, problem.D,
         problem.ctx, quantized=_attn_quantized(problem),
-        act_bytes=problem.act_bytes,
+        act_bytes=problem.act_bytes, q_len=problem.q_len,
         kv_partitions=plan.kv_partitions) * _attn_pallas_factor(problem)
 
 
@@ -945,7 +970,18 @@ register_attn_path("fused", cost=_cost_attn_fused,
 def _attn_plan_for(problem: AttentionProblem, name: str) -> AttentionPlan:
     parts = 1
     if name == "fused":
-        parts = choose_kv_partitions(problem.B, problem.Hkv, problem.pages)
+        group = max(1, problem.Hq // max(1, problem.Hkv))
+        q_tiles = problem.q_len // choose_q_block(problem.q_len, group)
+        parts = choose_kv_partitions(problem.B, problem.Hkv, problem.pages,
+                                     q_tiles=q_tiles)
+        # every partition flushes O(q_len·Hq·D) unnormalized partials, so
+        # Split-K traffic grows with S·q_len while the window it splits is
+        # fixed at ctx tokens — cap S where the combine bytes would start
+        # rivaling the gather staging the fused path exists to delete
+        # (binds only for multi-query tiles over short contexts; decode's
+        # q_len=1 never hits it)
+        while parts > 1 and parts * problem.q_len * 2 > problem.ctx:
+            parts //= 2
     return AttentionPlan(path=name, kv_partitions=parts)
 
 

@@ -381,7 +381,8 @@ def decode_step(params, cfg: ModelConfig, state, tokens: jax.Array,
                 pos: jax.Array, *, tables=None, active=None,
                 cache_len: int = 0,
                 kv_format: str = DEFAULT_KV_FORMAT,
-                attn_path: str = "gather"):
+                attn_path: str = "gather", kv_partitions=None,
+                live_pages=None):
     """One decode step. tokens: (B,) int32; pos: (B,) absolute positions.
 
     state: {"cache": stacked per-layer cache, ["enc_kv": ...]} from prefill.
@@ -420,7 +421,8 @@ def decode_step(params, cfg: ModelConfig, state, tokens: jax.Array,
                                        cache_len=cache_len, fmt=kvfmt)
             o = kvc.paged_decode_attention(
                 q, kvcache, tables, pos, window=cfg.sliding_window,
-                fmt=kvfmt, out_dtype=cfg.dtype, attn_path=attn_path)
+                fmt=kvfmt, out_dtype=cfg.dtype, attn_path=attn_path,
+                kv_partitions=kv_partitions, live_pages=live_pages)
         return layers.linear(lp["wo"], o.reshape(B, H * D), cfg), kvcache
 
     def body(h, xs):
@@ -524,19 +526,30 @@ def _ffn_seq(lp, cfg: ModelConfig, hc):
 
 
 def _paged_chunk_attn(ap, cfg: ModelConfig, x1, pool, tables, positions,
-                      safe_pos, *, fmt, cache_len: int, batched: bool):
+                      safe_pos, *, fmt, cache_len: int, batched: bool,
+                      attn_path: str = "gather", kv_partitions=None,
+                      live_pages=None):
     """Self-attention for a (B, C) token window over the paged pool.
 
     Shared by chunked prefill (B=1, one slot table) and speculative verify
-    (full batch, per-slot tables). Per layer the window's K/V are gathered
-    from the slot pages *first*, then the chunk's own K/V appended as an
-    explicit segment and scattered back — gather BEFORE scatter, because
+    (full batch, per-slot tables). Per layer the window's K/V are read
+    from the slot pages *first*, then the chunk's own K/V attended as an
+    explicit segment and scattered back — window BEFORE scatter, because
     when the stream wraps the logical window (prompt > cache_len on SWA
     archs) the chunk's offsets overwrite the oldest in-window entries,
     which this chunk's earliest queries still attend. Window entries at
     chunk positions (a sharing peer's copy of what this chunk recomputes,
     or its decode appends) are masked off to keep the softmax
-    single-counted. Returns (attn out (B, C, d), new pool).
+    single-counted.
+
+    ``attn_path`` picks how the window is read: ``"gather"``
+    materializes it to HBM (``gather_window``, clamped to ``live_pages``
+    when the caller knows the high-water mark) and runs
+    ``prefix_chunk_attention`` over the concatenation; ``"fused"`` walks
+    the block table inside the multi-query Pallas kernel
+    (``kernels/paged_attention.fused_chunk_attention``) — one pass over
+    pooled KV, no gathered copy, same masking. Returns
+    (attn out (B, C, d), new pool).
     """
     B, C, _ = x1.shape
     H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -548,20 +561,29 @@ def _paged_chunk_attn(ap, cfg: ModelConfig, x1, pool, tables, positions,
         layers.linear(ap["wv"], x1, cfg).reshape(B, C, Hkv, D), "bshd")
     q = layers.apply_rope(q, safe_pos, cfg.rope_theta)
     k = layers.apply_rope(k, safe_pos, cfg.rope_theta)
-    win = kvc.gather_window(pool, tables, fmt=fmt, out_dtype=cfg.dtype)
-    start = positions[:, :1]                          # first chunk pos
-    wpos = jnp.where(win.pos < start, win.pos, -1)
     # the chunk segment takes the same quantize→dequantize round-trip
     # as its stored copy, so intra-chunk attention sees exactly what
     # later queries will gather (a no-op for kv_fp16)
     kr = kv_dequantize(*kv_quantize(k, fmt), fmt=fmt, dtype=cfg.dtype)
     vr = kv_dequantize(*kv_quantize(v, fmt), fmt=fmt, dtype=cfg.dtype)
-    seq = attention.KVCache(
-        k=jnp.concatenate([win.k, kr.astype(win.k.dtype)], axis=1),
-        v=jnp.concatenate([win.v, vr.astype(win.v.dtype)], axis=1),
-        pos=jnp.concatenate([wpos, positions], axis=1))
-    o = attention.prefix_chunk_attention(q, seq, positions,
-                                         window=cfg.sliding_window)
+    if attn_path == "fused":
+        from repro.kernels.paged_attention import fused_chunk_attention
+
+        o = fused_chunk_attention(
+            q, kr, vr, pool, tables, positions,
+            window=cfg.sliding_window, fmt=fmt, out_dtype=cfg.dtype,
+            kv_partitions=kv_partitions)
+    else:
+        win = kvc.gather_window(pool, tables, fmt=fmt, out_dtype=cfg.dtype,
+                                live_pages=live_pages)
+        start = positions[:, :1]                      # first chunk pos
+        wpos = jnp.where(win.pos < start, win.pos, -1)
+        seq = attention.KVCache(
+            k=jnp.concatenate([win.k, kr.astype(win.k.dtype)], axis=1),
+            v=jnp.concatenate([win.v, vr.astype(win.v.dtype)], axis=1),
+            pos=jnp.concatenate([wpos, positions], axis=1))
+        o = attention.prefix_chunk_attention(q, seq, positions,
+                                             window=cfg.sliding_window)
     if batched:
         pool = kvc.scatter_chunks(pool, tables, k, v, positions,
                                   cache_len=cache_len, fmt=fmt)
@@ -584,7 +606,9 @@ def _cm_params(lp):
 def prefill_chunk_step(params, cfg: ModelConfig, state, h: jax.Array,
                        positions: jax.Array, table=None, slot=None, *,
                        cache_len: int,
-                       kv_format: str = DEFAULT_KV_FORMAT):
+                       kv_format: str = DEFAULT_KV_FORMAT,
+                       attn_path: str = "gather", kv_partitions=None,
+                       live_pages=None):
     """One chunked-prefill step for one slot — the single prefill path for
     every architecture family.
 
@@ -597,9 +621,11 @@ def prefill_chunk_step(params, cfg: ModelConfig, state, h: jax.Array,
     per-slot leaves, gathered with ``dynamic_slice_in_dim`` outside the
     layer scan, threaded through as scan xs/ys, and scattered back after.
 
-    Attention families scatter the chunk's K/V into the slot's pages and
-    run ``attention.prefix_chunk_attention`` over the gathered window
-    (see ``_paged_chunk_attn``); recurrent families step their masked
+    Attention families attend the window on ``attn_path`` — ``"gather"``
+    materializes it and runs ``attention.prefix_chunk_attention``,
+    ``"fused"`` one-passes the pooled pages in the multi-query Pallas
+    kernel (see ``_paged_chunk_attn``) — then scatter the chunk's K/V
+    into the slot's pages; recurrent families step their masked
     scans (``rwkv.time_mix_seq`` / ``ssm.ssm_seq`` with ``valid``), so a
     right-padded final chunk leaves the carry at the last real token.
 
@@ -660,7 +686,9 @@ def prefill_chunk_step(params, cfg: ModelConfig, state, h: jax.Array,
             x1 = _norm(cfg, lp["norm1"], hc)
             a, pool = _paged_chunk_attn(
                 lp["attn"], cfg, x1, pool, table, positions, safe_pos,
-                fmt=fmt, cache_len=cache_len, batched=False)
+                fmt=fmt, cache_len=cache_len, batched=False,
+                attn_path=attn_path, kv_partitions=kv_partitions,
+                live_pages=live_pages)
             s_out, s_fin = ssm.ssm_seq(lp["ssm"], x1, ssm_l, cfg, valid=valid)
             hc = hc + 0.5 * (a + s_out)
             return _ffn_seq(lp, cfg, hc), (pool, s_fin)
@@ -678,7 +706,9 @@ def prefill_chunk_step(params, cfg: ModelConfig, state, h: jax.Array,
             x1 = _norm(cfg, lp["norm1"], hc)
             a, pool = _paged_chunk_attn(
                 lp["attn"], cfg, x1, pool, table, positions, safe_pos,
-                fmt=fmt, cache_len=cache_len, batched=False)
+                fmt=fmt, cache_len=cache_len, batched=False,
+                attn_path=attn_path, kv_partitions=kv_partitions,
+                live_pages=live_pages)
             hc = hc + a
             hc = hc + _cross_attn_seq(
                 lp["cross"], cfg, _norm(cfg, lp["norm3"], hc), (ek_l, ev_l))
@@ -694,7 +724,9 @@ def prefill_chunk_step(params, cfg: ModelConfig, state, h: jax.Array,
             x1 = _norm(cfg, lp["norm1"], hc)
             a, pool = _paged_chunk_attn(
                 lp["attn"], cfg, x1, pool, table, positions, safe_pos,
-                fmt=fmt, cache_len=cache_len, batched=False)
+                fmt=fmt, cache_len=cache_len, batched=False,
+                attn_path=attn_path, kv_partitions=kv_partitions,
+                live_pages=live_pages)
             return _ffn_seq(lp, cfg, hc + a), pool
 
         h, new_pool = jax.lax.scan(body, h, (params["layers"], cache["kv"]))
@@ -707,7 +739,9 @@ def prefill_chunk_step(params, cfg: ModelConfig, state, h: jax.Array,
 
 def verify_step(params, cfg: ModelConfig, state, tokens: jax.Array,
                 positions: jax.Array, tables=None, *,
-                cache_len: int, kv_format: str = DEFAULT_KV_FORMAT):
+                cache_len: int, kv_format: str = DEFAULT_KV_FORMAT,
+                attn_path: str = "gather", kv_partitions=None,
+                live_pages=None):
     """Batched speculative-verify step — every family.
 
     tokens: (B, C) int32 — per slot, the last emitted token followed by up
@@ -783,7 +817,9 @@ def verify_step(params, cfg: ModelConfig, state, tokens: jax.Array,
             x1 = _norm(cfg, lp["norm1"], hc)
             a, pool = _paged_chunk_attn(
                 lp["attn"], cfg, x1, pool, tables, positions, safe_pos,
-                fmt=fmt, cache_len=cache_len, batched=True)
+                fmt=fmt, cache_len=cache_len, batched=True,
+                attn_path=attn_path, kv_partitions=kv_partitions,
+                live_pages=live_pages)
             s_out, _s_fin, s_steps = ssm.ssm_seq(
                 lp["ssm"], x1, ssm_l, cfg, valid=valid, collect_states=True)
             hc = hc + 0.5 * (a + s_out)
@@ -803,7 +839,9 @@ def verify_step(params, cfg: ModelConfig, state, tokens: jax.Array,
             x1 = _norm(cfg, lp["norm1"], hc)
             a, pool = _paged_chunk_attn(
                 lp["attn"], cfg, x1, pool, tables, positions, safe_pos,
-                fmt=fmt, cache_len=cache_len, batched=True)
+                fmt=fmt, cache_len=cache_len, batched=True,
+                attn_path=attn_path, kv_partitions=kv_partitions,
+                live_pages=live_pages)
             hc = hc + a
             hc = hc + _cross_attn_seq(
                 lp["cross"], cfg, _norm(cfg, lp["norm3"], hc), (ek_l, ev_l))
@@ -819,7 +857,9 @@ def verify_step(params, cfg: ModelConfig, state, tokens: jax.Array,
             x1 = _norm(cfg, lp["norm1"], hc)
             a, pool = _paged_chunk_attn(
                 lp["attn"], cfg, x1, pool, tables, positions, safe_pos,
-                fmt=fmt, cache_len=cache_len, batched=True)
+                fmt=fmt, cache_len=cache_len, batched=True,
+                attn_path=attn_path, kv_partitions=kv_partitions,
+                live_pages=live_pages)
             return _ffn_seq(lp, cfg, hc + a), pool
 
         h, new_pool = jax.lax.scan(body, h, (params["layers"], cache["kv"]))

@@ -345,10 +345,25 @@ class ServingEngine:
             kv_format=self.kv_format, paged=self.paged,
             backend=jax.default_backend(),
             act_bytes=jnp.dtype(cfg.dtype).itemsize)
-        attn_plan = planning.plan_attention(
-            attn_problem, path=None if attn_path == "auto" else attn_path)
+        forced_path = None if attn_path == "auto" else attn_path
+        attn_plan = planning.plan_attention(attn_problem, path=forced_path)
         self.attn_path = attn_plan.path
         self.kv_partitions = attn_plan.kv_partitions
+        # chunked prefill is a *different* attention problem than decode —
+        # q_len = the prefill chunk, one slot per call — so it gets its
+        # own costed plan (the multi-query fused kernel serves q_len > 1;
+        # the gather/fused tradeoff is priced per regime, not copied from
+        # the decode pick). A forced path forces every regime.
+        if self.paged and self.chunked:
+            pf_plan = planning.plan_attention(
+                dataclasses.replace(attn_problem, B=1,
+                                    q_len=self.prefill_chunk),
+                path=forced_path)
+            self.prefill_attn_path = pf_plan.path
+            self.prefill_kv_partitions = pf_plan.kv_partitions
+        else:
+            self.prefill_attn_path = self.attn_path
+            self.prefill_kv_partitions = self.kv_partitions
 
         self.spec_k = int(spec_k)
         self.proposer: Optional[spec.Proposer] = None
@@ -362,6 +377,17 @@ class ServingEngine:
                                         cfg=cfg, paged=self.chunked)
                 self.proposer = spec.make_proposer(str(speculate),
                                                    target_cfg=cfg)
+        # speculative verify: q_len = k+1 queries per slot, full batch —
+        # same plan shape as prefill, at the verify step's true width
+        if self.paged and self.proposer is not None:
+            vf_plan = planning.plan_attention(
+                dataclasses.replace(attn_problem, q_len=self.spec_k + 1),
+                path=forced_path)
+            self.verify_attn_path = vf_plan.path
+            self.verify_kv_partitions = vf_plan.kv_partitions
+        else:
+            self.verify_attn_path = self.attn_path
+            self.verify_kv_partitions = self.kv_partitions
 
         self.plans: Dict[str, planning.KernelPlan] = {}
         if (getattr(cfg, "w4a16_strategy", "auto") == "auto"
@@ -389,9 +415,12 @@ class ServingEngine:
         self.params = params
 
         self._prefill_fns: Dict[tuple, Any] = {}
-        self._serve_fn = None
-        self._chunk_fn = None
-        self._verify_fn = None
+        # decode/chunk/verify steps compile per live-page bucket (None =
+        # full table; gather path only — see _live_bucket), so the dicts
+        # hold at most 1 + log2(pages_slot) variants each
+        self._serve_fns: Dict[Optional[int], Any] = {}
+        self._chunk_fns: Dict[Optional[int], Any] = {}
+        self._verify_fns: Dict[Optional[int], Any] = {}
         self._embed_fn = None
         self._encode_fn = None
         # interleaved decode steps must not clobber the carries of slots
@@ -479,30 +508,49 @@ class ServingEngine:
                                                     jnp.bool_)
         return inputs
 
-    def _serve_step(self):
-        if self._serve_fn is None:
+    def _live_bucket(self, hw: int) -> Optional[int]:
+        """Live-page bucket for a gather step whose high-water mark is
+        ``hw`` pages: halve the full table width while it stays a
+        multiple of 2 covering ``hw``, so recompiles are bounded at
+        log2(pages_slot) variants while a young batch stops paying the
+        page-rounded ``cache_len`` gather. None = full table."""
+        w = self.pages_slot
+        hw = max(1, min(int(hw), w))
+        while w % 2 == 0 and w // 2 >= hw:
+            w //= 2
+        return None if w >= self.pages_slot else w
+
+    def _serve_step(self, live_pages: Optional[int] = None):
+        fn = self._serve_fns.get(live_pages)
+        if fn is None:
             kw = dict(cache_len=self.cache_len, kv_format=self.kv_format,
-                      attn_path=self.attn_path)
+                      attn_path=self.attn_path,
+                      kv_partitions=self.kv_partitions,
+                      live_pages=live_pages)
             if self.mesh is None:
-                self._serve_fn = jax.jit(
-                    rsteps.make_serve_step(self.cfg, **kw))
+                fn = jax.jit(rsteps.make_serve_step(self.cfg, **kw))
             else:
                 inputs_abs = self._serve_inputs_abstract()
                 self._state_shardings = shd.decode_state_shardings(
                     inputs_abs["state"], self.cfg, self.mesh)
-                self._serve_fn = rsteps.jit_serve_step(
+                fn = rsteps.jit_serve_step(
                     self.cfg, self.mesh,
                     jax.eval_shape(lambda: self.params), inputs_abs, **kw)
-        return self._serve_fn
+            self._serve_fns[live_pages] = fn
+        return fn
 
-    def _chunk_step(self):
-        if self._chunk_fn is None:
+    def _chunk_step(self, live_pages: Optional[int] = None):
+        fn = self._chunk_fns.get(live_pages)
+        if fn is None:
             C = self.prefill_chunk
+            kw = dict(kv_format=self.kv_format,
+                      attn_path=self.prefill_attn_path,
+                      kv_partitions=self.prefill_kv_partitions,
+                      live_pages=live_pages)
             if self.mesh is None:
-                self._chunk_fn = jax.jit(
+                fn = jax.jit(
                     rsteps.make_prefill_chunk_step(
-                        self.cfg, self.cache_len,
-                        kv_format=self.kv_format),
+                        self.cfg, self.cache_len, **kw),
                     donate_argnums=(1,))
             else:
                 inputs_abs = {
@@ -515,23 +563,28 @@ class ServingEngine:
                 if self.paged:
                     inputs_abs["table"] = jax.ShapeDtypeStruct(
                         (1, self.pages_slot), jnp.int32)
-                self._chunk_fn = rsteps.jit_prefill_chunk_step(
+                fn = rsteps.jit_prefill_chunk_step(
                     self.cfg, self.mesh, self.cache_len,
-                    jax.eval_shape(lambda: self.params), inputs_abs,
-                    kv_format=self.kv_format)
-        return self._chunk_fn
+                    jax.eval_shape(lambda: self.params), inputs_abs, **kw)
+            self._chunk_fns[live_pages] = fn
+        return fn
 
-    def _verify_step(self):
+    def _verify_step(self, live_pages: Optional[int] = None):
         """Compiled speculative-verify step: (B, spec_k+1) positions per
         call, replacing the plain decode step whenever a proposer is
         wired (a slot with no drafts just pads its row to one live
         position — byte-identical to plain decode for that slot)."""
-        if self._verify_fn is None:
+        fn = self._verify_fns.get(live_pages)
+        if fn is None:
             C = self.spec_k + 1
+            kw = dict(kv_format=self.kv_format,
+                      attn_path=self.verify_attn_path,
+                      kv_partitions=self.verify_kv_partitions,
+                      live_pages=live_pages)
             if self.mesh is None:
-                self._verify_fn = jax.jit(
+                fn = jax.jit(
                     rsteps.make_verify_step(self.cfg, self.cache_len,
-                                            kv_format=self.kv_format),
+                                            **kw),
                     donate_argnums=(1,))
             else:
                 inputs_abs = {
@@ -546,11 +599,11 @@ class ServingEngine:
                         (self.max_batch, self.pages_slot), jnp.int32)
                 self._state_shardings = shd.decode_state_shardings(
                     inputs_abs["state"], self.cfg, self.mesh)
-                self._verify_fn = rsteps.jit_verify_step(
+                fn = rsteps.jit_verify_step(
                     self.cfg, self.mesh, self.cache_len,
-                    jax.eval_shape(lambda: self.params), inputs_abs,
-                    kv_format=self.kv_format)
-        return self._verify_fn
+                    jax.eval_shape(lambda: self.params), inputs_abs, **kw)
+            self._verify_fns[live_pages] = fn
+        return fn
 
     def _embed(self, tokens):
         if self._embed_fn is None:
@@ -1017,7 +1070,14 @@ class ServingEngine:
         }
         if self.paged:
             inputs["table"] = jnp.asarray(self._tables[i:i + 1])
-        res = self._chunk_step()(self.params, state, inputs)
+        lp = None
+        if self.paged and self.prefill_attn_path == "gather" \
+                and start < self.cache_len:
+            # gather only reads pool entries < start (the chunk itself is
+            # the in-flight segment), so the live high-water mark is the
+            # pages holding positions 0..start-1
+            lp = self._live_bucket(max(1, -(-start // self.page_size)))
+        res = self._chunk_step(lp)(self.params, state, inputs)
         state = res["state"]
         slot.pf_next = end
         if end == total:
@@ -1073,6 +1133,8 @@ class ServingEngine:
             self.proposer.reset(self)
         with self._ctx():
             self._state = self._init_state()
+            # warm the full-table step (live-page bucket variants compile
+            # lazily on first use inside _step_body)
             self._serve = self._verify_step() if self.proposer is not None \
                 else self._serve_step()
         self._state_dirty = True    # needs re-placing onto the serve
@@ -1222,6 +1284,17 @@ class ServingEngine:
             {"ring": 0, "gather": 1, "fused": 2}.get(self.attn_path, -1))
         m.counter(f"engine_attn_path_steps_{self.attn_path}",
                   "scheduler steps served by this attention path").inc()
+        path_code = {"ring": 0, "gather": 1, "fused": 2}
+        if self.chunked:
+            m.gauge("engine_prefill_attn_path",
+                    "chunked-prefill attention path "
+                    "(0=ring 1=gather 2=fused)").set(
+                path_code.get(self.prefill_attn_path, -1))
+        if self.proposer is not None:
+            m.gauge("engine_verify_attn_path",
+                    "speculative-verify attention path "
+                    "(0=ring 1=gather 2=fused)").set(
+                path_code.get(self.verify_attn_path, -1))
         if self.proposer is not None and self.report is not None:
             m.gauge("engine_acceptance_rate",
                     "accepted/proposed draft tokens").set(
@@ -1255,7 +1328,6 @@ class ServingEngine:
         report = self.report
         slots = self._slots
         proposer = self.proposer
-        serve = self._serve
         state = self._state
         state_dirty = self._state_dirty
         tok, pos = self._tok, self._pos
@@ -1397,7 +1469,16 @@ class ServingEngine:
                     if s is None or s.phase != "active":
                         step_tables[i] = -1
                 vinputs["tables"] = jnp.asarray(step_tables)
-            res = serve(self.params, state, vinputs)
+            lp = None
+            if self.paged and self.verify_attn_path == "gather":
+                mx = max(int(pos[i]) for i in active)
+                if mx + k < self.cache_len:
+                    # gather reads pool entries < positions[:, 0] only
+                    # (the k+1 in-flight rows are the segment), so the
+                    # live high-water mark is ceil(max_pos / page_size)
+                    lp = self._live_bucket(
+                        max(1, -(-mx // self.page_size)))
+            res = self._verify_step(lp)(self.params, state, vinputs)
             state = res["state"]
             nxt = np.asarray(res["next"])          # (B, C)
             dt = time.perf_counter() - t0
@@ -1494,7 +1575,14 @@ class ServingEngine:
                 if s is None or s.phase != "active":
                     step_tables[i] = -1
             inputs["tables"] = jnp.asarray(step_tables)
-        res = serve(self.params, inputs)
+        lp = None
+        if self.paged and self.attn_path == "gather":
+            mx = max(int(pos[i]) for i in active)
+            if mx < self.cache_len:
+                # insert-before-attend: the step writes position mx and
+                # reads entries <= mx, so the high water is ceil((mx+1)/ps)
+                lp = self._live_bucket(-(-(mx + 1) // self.page_size))
+        res = self._serve_step(lp)(self.params, inputs)
         state = res["state"]
         nxt = np.asarray(res["next"])
         dt = time.perf_counter() - t0

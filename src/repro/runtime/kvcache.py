@@ -122,7 +122,8 @@ def _unflat(flat_leaf: jax.Array, nb: int, ps: int) -> jax.Array:
 
 
 def gather_window(pool: PagedKVCache, tables: jax.Array, *,
-                  fmt: KVFormat, out_dtype) -> attention.KVCache:
+                  fmt: KVFormat, out_dtype,
+                  live_pages: Optional[int] = None) -> attention.KVCache:
     """Reassemble each slot's logical ring window from its block table.
 
     tables: (B, T) int32, -1 → null block. Returns a virtual
@@ -130,8 +131,19 @@ def gather_window(pool: PagedKVCache, tables: jax.Array, *,
     the exact array layout the ring cache kept, so ``decode_attention``'s
     pos-tag masking (and therefore SWA / vision-prefix semantics) applies
     unchanged.
+
+    ``live_pages`` (static) clamps the gather to the leading that-many
+    table entries: ring offsets fill pages front-to-back until the stream
+    wraps, so a caller that knows the batch's live-page high-water mark
+    (the engine tracks it per step) skips materializing the dead
+    page-rounded tail of ``cache_len`` — the over-gather that made the
+    fallback path look worse than it is early in every request's life.
+    Masking is unchanged; callers must not clamp below the high-water
+    mark (dropped pages would silently vanish from attention).
     """
     bt = jnp.where(tables < 0, NULL_BLOCK, tables)         # (B, T)
+    if live_pages is not None:
+        bt = bt[:, :max(1, min(int(live_pages), bt.shape[1]))]
     B, T = bt.shape
     ps = pool.page_size
 
@@ -298,17 +310,21 @@ def paged_decode_attention(q: jax.Array, pool: PagedKVCache,
                            tables: jax.Array, pos: jax.Array, *,
                            window: int = 0, fmt: KVFormat, out_dtype,
                            attn_path: str = "gather",
-                           kv_partitions=None,
+                           kv_partitions=None, live_pages=None,
                            interpret=None) -> jax.Array:
     """Decode attention over the paged pool, on the planned path.
 
     ``"gather"`` reassembles the slot windows to HBM and runs the
     unchanged ring-cache attention (same masking, same dots) — two passes
-    over the KV working set. ``"fused"`` walks the block table inside the
-    Pallas kernel (``kernels/paged_attention.py``): pages stream through
-    VMEM, `kv8_channel` dequant and online softmax fuse into one pass.
-    Both are token-identical; ``planning.plan_attention`` picks per
-    backend (gather on CPU, fused on TPU for long contexts).
+    over the KV working set; ``live_pages`` (static) clamps that gather
+    to the batch's live-page high-water mark (see ``gather_window``).
+    ``"fused"`` walks the block table inside the Pallas kernel
+    (``kernels/paged_attention.py``): pages stream through VMEM,
+    `kv8_channel` dequant and online softmax fuse into one pass, and the
+    clamp is moot — unwritten pages cost one masked VMEM tile, not an
+    HBM materialization. Both are token-identical;
+    ``planning.plan_attention`` picks per backend (gather on CPU, fused
+    on TPU for long contexts).
     """
     if attn_path == "fused":
         from repro.kernels.paged_attention import fused_paged_attention
@@ -321,7 +337,8 @@ def paged_decode_attention(q: jax.Array, pool: PagedKVCache,
         raise ValueError(
             f"unknown attn_path {attn_path!r} for paged decode (expected "
             f"gather | fused; 'ring' is the non-paged engine's path)")
-    cache = gather_window(pool, tables, fmt=fmt, out_dtype=out_dtype)
+    cache = gather_window(pool, tables, fmt=fmt, out_dtype=out_dtype,
+                          live_pages=live_pages)
     return attention.decode_attention(q, cache, pos, window=window)
 
 

@@ -119,60 +119,78 @@ def make_prefill_step(cfg: ModelConfig, cache_len: int):
 
 def make_serve_step(cfg: ModelConfig, *, cache_len: int = 0,
                     kv_format: str = "kv_fp16",
-                    attn_path: str = "gather"):
+                    attn_path: str = "gather", kv_partitions=None,
+                    live_pages=None):
     """serve_step(params, inputs={state, tokens, pos, [tables], [active]})
     — one decode step. When ``inputs`` carries per-slot block ``tables``
     the KV state is the paged pool, ``cache_len``/``kv_format`` select the
-    slot-window length and KV storage format, and ``attn_path`` the
-    planned decode-attention path (see runtime/kvcache.py). ``active``
-    (B,) bool masks recurrent-carry writes for rows that are mid chunked
-    prefill (carry families on the chunked engine only)."""
+    slot-window length and KV storage format, and ``attn_path`` /
+    ``kv_partitions`` the planned decode-attention path and Split-K
+    degree (see runtime/kvcache.py). ``live_pages`` (static) clamps the
+    gather path to the batch's live-page high-water mark — the engine
+    compiles one variant per power-of-2 bucket. ``active`` (B,) bool
+    masks recurrent-carry writes for rows that are mid chunked prefill
+    (carry families on the chunked engine only)."""
     def serve_step(params, inputs):
         logits, state = T.decode_step(
             params, cfg, inputs["state"], inputs["tokens"], inputs["pos"],
             tables=inputs.get("tables"), active=inputs.get("active"),
-            cache_len=cache_len, kv_format=kv_format, attn_path=attn_path)
+            cache_len=cache_len, kv_format=kv_format, attn_path=attn_path,
+            kv_partitions=kv_partitions, live_pages=live_pages)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return {"next": next_tok, "logits": logits, "state": state}
     return serve_step
 
 
 def make_prefill_chunk_step(cfg: ModelConfig, cache_len: int, *,
-                            kv_format: str = "kv_fp16"):
+                            kv_format: str = "kv_fp16",
+                            attn_path: str = "gather", kv_partitions=None,
+                            live_pages=None):
     """chunk_step(params, state, inputs={h, positions, slot, [table]}) —
     one chunked-prefill step for one slot (see T.prefill_chunk_step):
-    scatters the chunk's K/V into the slot's pooled pages (attention
-    families — ``table`` absent for attention-free rwkv), threads the
-    slot's recurrent carries / cross-KV through by the ``slot`` row index,
-    and returns the updated state plus last-valid-position logits (used
-    when the final chunk completes the prompt). ``state`` is its own
-    argument so the block pool — the largest serving tensor — can be
-    donated without dragging the small non-donatable chunk inputs along."""
+    attends the slot's pooled window on ``attn_path`` (gather, clamped to
+    ``live_pages``, or the fused multi-query kernel with ``kv_partitions``
+    page-axis splits), scatters the chunk's K/V into the slot's pooled
+    pages (attention families — ``table`` absent for attention-free
+    rwkv), threads the slot's recurrent carries / cross-KV through by the
+    ``slot`` row index, and returns the updated state plus
+    last-valid-position logits (used when the final chunk completes the
+    prompt). ``state`` is its own argument so the block pool — the
+    largest serving tensor — can be donated without dragging the small
+    non-donatable chunk inputs along."""
     def chunk_step(params, state, inputs):
         logits, state = T.prefill_chunk_step(
             params, cfg, state, inputs["h"], inputs["positions"],
             inputs.get("table"), inputs["slot"],
-            cache_len=cache_len, kv_format=kv_format)
+            cache_len=cache_len, kv_format=kv_format, attn_path=attn_path,
+            kv_partitions=kv_partitions, live_pages=live_pages)
         return {"logits": logits, "state": state}
     return chunk_step
 
 
 def make_verify_step(cfg: ModelConfig, cache_len: int, *,
-                     kv_format: str = "kv_fp16"):
+                     kv_format: str = "kv_fp16",
+                     attn_path: str = "gather", kv_partitions=None,
+                     live_pages=None):
     """verify(params, state, inputs={tokens, positions, [tables]}) — one
     batched speculative-verify step (see T.verify_step): scores the last
     emitted token plus up to C-1 draft tokens for every slot in one
     forward pass and returns the per-position greedy choice. ``next`` is
     the device-side argmax over *all* (slot, position) cells, so the host
     syncs one (B, C) int array per step regardless of batch or draft
-    length. ``state`` is its own (donatable) argument, as in the chunked
+    length. The (B, k+1) window attends its pooled context on
+    ``attn_path`` exactly like a prefill chunk (``"fused"`` = one
+    multi-query kernel pass, ``"gather"`` clamped to ``live_pages``).
+    ``state`` is its own (donatable) argument, as in the chunked
     prefill step. Carry families additionally return ``carries`` — the
     per-position carry checkpoints the engine selects the accepted
     frontier from (see T.verify_step)."""
     def verify(params, state, inputs):
         logits, state, carries = T.verify_step(
             params, cfg, state, inputs["tokens"], inputs["positions"],
-            inputs.get("tables"), cache_len=cache_len, kv_format=kv_format)
+            inputs.get("tables"), cache_len=cache_len, kv_format=kv_format,
+            attn_path=attn_path, kv_partitions=kv_partitions,
+            live_pages=live_pages)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         out = {"next": next_tok, "logits": logits, "state": state}
         if carries is not None:
@@ -259,9 +277,11 @@ def jit_prefill_step(cfg, mesh, cache_len: int, params_abstract,
 
 def jit_serve_step(cfg, mesh, params_abstract, inputs_abstract, *,
                    fsdp_serve=False, cache_len: int = 0,
-                   kv_format: str = "kv_fp16", attn_path: str = "gather"):
+                   kv_format: str = "kv_fp16", attn_path: str = "gather",
+                   kv_partitions=None, live_pages=None):
     fn = make_serve_step(cfg, cache_len=cache_len, kv_format=kv_format,
-                         attn_path=attn_path)
+                         attn_path=attn_path, kv_partitions=kv_partitions,
+                         live_pages=live_pages)
     pshard = shd.param_shardings(params_abstract, mesh, fsdp=fsdp_serve)
     ishard = serve_input_shardings(inputs_abstract, cfg, mesh)
     B = inputs_abstract["tokens"].shape[0]
@@ -280,11 +300,15 @@ def jit_serve_step(cfg, mesh, params_abstract, inputs_abstract, *,
 
 def jit_prefill_chunk_step(cfg, mesh, cache_len, params_abstract,
                            inputs_abstract, *, kv_format: str = "kv_fp16",
-                           fsdp_serve=False):
+                           attn_path: str = "gather", kv_partitions=None,
+                           live_pages=None, fsdp_serve=False):
     """Sharded chunked-prefill step: state in/out on the decode-state
     shardings (the pool replicates pages over DP, shards heads over TP);
     the B=1 chunk inputs replicate."""
-    fn = make_prefill_chunk_step(cfg, cache_len, kv_format=kv_format)
+    fn = make_prefill_chunk_step(cfg, cache_len, kv_format=kv_format,
+                                 attn_path=attn_path,
+                                 kv_partitions=kv_partitions,
+                                 live_pages=live_pages)
     pshard = shd.param_shardings(params_abstract, mesh, fsdp=fsdp_serve)
     sshard = shd.decode_state_shardings(inputs_abstract["state"], cfg, mesh)
     ishard = {k: shd.data_shardings(v, mesh)
@@ -304,12 +328,15 @@ def jit_prefill_chunk_step(cfg, mesh, cache_len, params_abstract,
 
 def jit_verify_step(cfg, mesh, cache_len, params_abstract,
                     inputs_abstract, *, kv_format: str = "kv_fp16",
-                    fsdp_serve=False):
+                    attn_path: str = "gather", kv_partitions=None,
+                    live_pages=None, fsdp_serve=False):
     """Sharded speculative-verify step: state in/out on the decode-state
     shardings (donated, like the chunk step); tokens/positions/tables are
     batch-sharded over data, and the (B, C) next/logits outputs come back
     batch-sharded too."""
-    fn = make_verify_step(cfg, cache_len, kv_format=kv_format)
+    fn = make_verify_step(cfg, cache_len, kv_format=kv_format,
+                          attn_path=attn_path, kv_partitions=kv_partitions,
+                          live_pages=live_pages)
     pshard = shd.param_shardings(params_abstract, mesh, fsdp=fsdp_serve)
     sshard = shd.decode_state_shardings(inputs_abstract["state"], cfg, mesh)
     ishard = {k: shd.data_shardings(v, mesh)

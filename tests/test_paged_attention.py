@@ -18,9 +18,10 @@ import pytest
 from repro import configs
 from repro.core import quant
 from repro.kernels import common, planning
-from repro.kernels.paged_attention import fused_paged_attention, kv_stage_for
+from repro.kernels.paged_attention import (
+    fused_chunk_attention, fused_paged_attention, kv_stage_for)
 from repro.kernels import template
-from repro.models import transformer as T
+from repro.models import attention, transformer as T
 from repro.runtime import kvcache as kvc
 from repro.runtime import metrics as rmetrics
 from repro.runtime.engine import Request, ServingEngine
@@ -134,6 +135,161 @@ def test_kv_stage_selection_and_refusal():
 
 
 # ---------------------------------------------------------------------------
+# op-level multi-query parity: fused_chunk_attention ≡ gather + segment
+# ---------------------------------------------------------------------------
+
+def _roundtrip(x, fmt):
+    return quant.kv_dequantize(*quant.kv_quantize(x, fmt), fmt=fmt,
+                               dtype=jnp.float32)
+
+
+def _chunk_setup(fmt_name, *, B=2, C=3, start=6, Hkv=2, D=32, ps=4,
+                 T_pages=4):
+    """A pool holding positions [0, start) per slot plus an in-flight
+    chunk of C tokens at positions [start, start+C) — the pre-scatter
+    state both chunk-attention paths see. Positions past cache_len alias
+    earlier ring offsets (the SWA-wrap layout)."""
+    fmt = quant.get_kv_format(fmt_name)
+    nb = 1 + B * T_pages
+    cache_len = T_pages * ps
+    pool = kvc.init_pool(nb, ps, Hkv, D, jnp.float32, fmt_name)
+    tables = jnp.asarray(
+        (1 + np.arange(B * T_pages, dtype=np.int32)).reshape(B, T_pages))
+    for p in range(start):
+        k = jax.random.normal(jax.random.fold_in(KEY, 2 * p),
+                              (B, Hkv, D), jnp.float32)
+        v = jax.random.normal(jax.random.fold_in(KEY, 2 * p + 1),
+                              (B, Hkv, D), jnp.float32)
+        pool = kvc.paged_insert(pool, tables, k, v,
+                                jnp.full((B,), p, jnp.int32),
+                                cache_len=cache_len, fmt=fmt)
+    q = jax.random.normal(jax.random.fold_in(KEY, 777),
+                          (B, C, 2 * Hkv, D), jnp.float32)
+    # the chunk segment takes the same quantize round-trip the model
+    # applies before attending it (a no-op for kv_fp16)
+    kseg = _roundtrip(jax.random.normal(jax.random.fold_in(KEY, 778),
+                                        (B, C, Hkv, D), jnp.float32), fmt)
+    vseg = _roundtrip(jax.random.normal(jax.random.fold_in(KEY, 779),
+                                        (B, C, Hkv, D), jnp.float32), fmt)
+    positions = jnp.broadcast_to(
+        start + jnp.arange(C, dtype=jnp.int32), (B, C))
+    return q, kseg, vseg, pool, tables, positions, fmt
+
+
+def _chunk_reference(q, kseg, vseg, pool, tables, positions, *, window,
+                     fmt):
+    """The gather path verbatim (transformer._paged_chunk_attn gather
+    branch): materialize the window, mask entries at chunk positions,
+    concatenate the segment, run prefix_chunk_attention."""
+    win = kvc.gather_window(pool, tables, fmt=fmt, out_dtype=jnp.float32)
+    start = positions[:, :1]
+    wpos = jnp.where(win.pos < start, win.pos, -1)
+    seq = attention.KVCache(
+        k=jnp.concatenate([win.k, kseg.astype(win.k.dtype)], axis=1),
+        v=jnp.concatenate([win.v, vseg.astype(win.v.dtype)], axis=1),
+        pos=jnp.concatenate([wpos, positions], axis=1))
+    return attention.prefix_chunk_attention(q, seq, positions,
+                                            window=window)
+
+
+@pytest.mark.parametrize("fmt_name", ["kv_fp16", "kv8_channel"])
+@pytest.mark.parametrize("C,start", [(1, 6), (3, 6), (6, 5)])
+@pytest.mark.parametrize("window", [0, 8])
+def test_fused_chunk_matches_gather(fmt_name, C, start, window):
+    """The tentpole parity matrix: q_len ∈ {1, 3, page-straddling 6},
+    both KV formats, full + sliding-window masks — the fused multi-query
+    walk must reproduce the gathered-window reference bit-for-policy."""
+    q, ks, vs, pool, tables, positions, fmt = _chunk_setup(
+        fmt_name, C=C, start=start)
+    ref = _chunk_reference(q, ks, vs, pool, tables, positions,
+                           window=window, fmt=fmt)
+    out = fused_chunk_attention(q, ks, vs, pool, tables, positions,
+                                window=window, fmt=fmt,
+                                out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("parts", [1, 2])
+def test_fused_chunk_split_k(parts):
+    q, ks, vs, pool, tables, positions, fmt = _chunk_setup(
+        "kv8_channel", C=3, start=9)
+    ref = _chunk_reference(q, ks, vs, pool, tables, positions,
+                           window=0, fmt=fmt)
+    out = fused_chunk_attention(q, ks, vs, pool, tables, positions,
+                                window=0, fmt=fmt, out_dtype=jnp.float32,
+                                kv_partitions=parts)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_fused_chunk_swa_wrap():
+    """Chunk positions past cache_len: the pool's pos tags are
+    out-of-order across pages and stale single-counted entries at chunk
+    positions must stay masked — the layout chunked prefill hits on SWA
+    archs whose prompt exceeds the logical window."""
+    q, ks, vs, pool, tables, positions, fmt = _chunk_setup(
+        "kv_fp16", C=3, start=18)   # cache_len=16 → the ring has wrapped:
+                                    # page 0 holds tags {16, 17, 2, 3}
+    for window in (0, 8):
+        ref = _chunk_reference(q, ks, vs, pool, tables, positions,
+                               window=window, fmt=fmt)
+        out = fused_chunk_attention(q, ks, vs, pool, tables, positions,
+                                    window=window, fmt=fmt,
+                                    out_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-6)
+
+
+def test_fused_chunk_null_block_padding():
+    """-1 table tails resolve to the null block; padded query rows
+    (positions = -1, the verify step's short-draft rows) produce garbage
+    both paths discard — parity is asserted on live rows only."""
+    q, ks, vs, pool, tables, positions, fmt = _chunk_setup(
+        "kv8_channel", C=3, start=5)
+    tables = tables.at[1, 2:].set(-1)
+    positions = positions.at[1, 1:].set(-1)     # slot 1: one live query
+    ref = _chunk_reference(q, ks, vs, pool, tables, positions,
+                           window=0, fmt=fmt)
+    out = fused_chunk_attention(q, ks, vs, pool, tables, positions,
+                                window=0, fmt=fmt, out_dtype=jnp.float32)
+    live = np.asarray(positions) >= 0
+    np.testing.assert_allclose(np.asarray(out)[live], np.asarray(ref)[live],
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_fused_chunk_masks_pool_entries_at_chunk_positions():
+    """Single-counting: pool entries tagged >= positions[:, 0] (a sharing
+    peer's copy of the same tokens, or stale rejected drafts) must not be
+    double-attended alongside the in-flight segment."""
+    q, ks, vs, pool, tables, positions, fmt = _chunk_setup(
+        "kv_fp16", C=3, start=6)
+    # poison the pool at the chunk's own positions with junk copies
+    cache_len = 16
+    for j in range(3):
+        junk = jnp.full((2, 2, 32), 37.0, jnp.float32)
+        pool = kvc.paged_insert(pool, tables, junk, junk,
+                                jnp.full((2,), 6 + j, jnp.int32),
+                                cache_len=cache_len, fmt=fmt)
+    ref = _chunk_reference(q, ks, vs, pool, tables, positions,
+                          window=0, fmt=fmt)
+    out = fused_chunk_attention(q, ks, vs, pool, tables, positions,
+                                window=0, fmt=fmt, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_fused_chunk_interpret_toggle():
+    q, ks, vs, pool, tables, positions, fmt = _chunk_setup("kv_fp16")
+    auto = fused_chunk_attention(q, ks, vs, pool, tables, positions,
+                                 window=0, fmt=fmt, out_dtype=jnp.float32)
+    forced = fused_chunk_attention(q, ks, vs, pool, tables, positions,
+                                   window=0, fmt=fmt,
+                                   out_dtype=jnp.float32, interpret=True)
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(forced))
+
+
+# ---------------------------------------------------------------------------
 # gather_window fp16 fast path (satellite)
 # ---------------------------------------------------------------------------
 
@@ -235,6 +391,100 @@ def test_choose_kv_partitions_occupancy():
     assert planning.choose_kv_partitions(1, 1, 1) == 1
 
 
+def test_choose_kv_partitions_q_tiles_occupancy():
+    """Multi-query tiles count toward grid occupancy: a chunk that already
+    fills the cores leaves no reason to Split-K."""
+    cores = planning.num_cores()
+    assert planning.choose_kv_partitions(1, 1, 64, q_tiles=cores) == 1
+    assert planning.choose_kv_partitions(1, 1, 64, q_tiles=1) >= \
+        planning.choose_kv_partitions(1, 1, 64, q_tiles=cores)
+
+
+def test_choose_q_block():
+    """Q-tile sizing: the largest divisor of q_len whose row block
+    (tile × group) stays within one 128-lane register tile."""
+    assert planning.choose_q_block(1, 8) == 1
+    assert planning.choose_q_block(32, 4) == 32        # 32·4 = 128 exactly
+    assert planning.choose_q_block(32, 8) == 16        # cap 128//8
+    assert planning.choose_q_block(5, 6) == 5          # k+1 verify widths fit
+    t = planning.choose_q_block(12, 16)
+    assert t == 6 and 12 % t == 0
+    assert planning.choose_q_block(7, 64) == 1         # prime over a tiny cap
+
+
+def test_plan_attention_multi_query_costed():
+    """The q_len-aware decision: fused wins on TPU for chunked prefill
+    (q_len=chunk) and speculative verify (q_len=k+1) because gather still
+    materializes the full window per call; CPU hosts keep gather. The
+    byte model itself must rank fused strictly cheaper."""
+    from repro.core import costmodel as cm
+    for ql in (5, 32):
+        assert planning.plan_attention(
+            _problem(B=1, q_len=ql)).path == "fused"
+        assert planning.plan_attention(
+            _problem(B=1, q_len=ql, backend="cpu")).path == "gather"
+        gb = cm.paged_attn_bytes("gather", 1, 32, 8, 128, 4096,
+                                 quantized=True, q_len=ql)
+        fb = cm.paged_attn_bytes("fused", 1, 32, 8, 128, 4096,
+                                 quantized=True, kv_partitions=8, q_len=ql)
+        assert fb < gb
+        assert cm.attn_decode_time_tpu(
+            "fused", 1, 32, 8, 128, 4096, quantized=True,
+            kv_partitions=8, q_len=ql) < cm.attn_decode_time_tpu(
+            "gather", 1, 32, 8, 128, 4096, quantized=True, q_len=ql)
+
+
+# ---------------------------------------------------------------------------
+# gather_window live-page clamp (satellite)
+# ---------------------------------------------------------------------------
+
+def test_gather_window_live_pages_clamp():
+    """Clamping at (or above) the per-slot high-water mark drops only
+    never-written pages: the surviving window is identical and the
+    attention output unchanged — the over-gather fix for young slots."""
+    q, pool, tables, pos, fmt = _filled_pool("kv_fp16", fill=6)  # 2 pages hot
+    full = kvc.gather_window(pool, tables, fmt=fmt, out_dtype=jnp.float32)
+    assert np.all(np.asarray(full.pos[:, 8:]) == -1)   # tail is empty anyway
+    clamped = kvc.gather_window(pool, tables, fmt=fmt,
+                                out_dtype=jnp.float32, live_pages=2)
+    assert clamped.k.shape[1] == 2 * 4                 # 2 pages × page_size 4
+    np.testing.assert_array_equal(np.asarray(clamped.k),
+                                  np.asarray(full.k[:, :8]))
+    np.testing.assert_array_equal(np.asarray(clamped.pos),
+                                  np.asarray(full.pos[:, :8]))
+    ref = kvc.paged_decode_attention(q, pool, tables, pos, fmt=fmt,
+                                     out_dtype=jnp.float32)
+    out = kvc.paged_decode_attention(q, pool, tables, pos, fmt=fmt,
+                                     out_dtype=jnp.float32, live_pages=2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)
+    # a clamp wider than the table is a no-op, and the floor is one page
+    wide = kvc.gather_window(pool, tables, fmt=fmt, out_dtype=jnp.float32,
+                             live_pages=99)
+    assert wide.k.shape == full.k.shape
+    assert kvc.gather_window(pool, tables, fmt=fmt, out_dtype=jnp.float32,
+                             live_pages=0).k.shape[1] == 4
+
+
+def test_engine_live_bucket():
+    """_live_bucket covers the high-water mark with a power-of-2 fraction
+    of the slot table (bounded recompiles), returning None (= full table)
+    once the mark is past half the ring."""
+    cfg = dataclasses.replace(configs.get_reduced("h2o-danube-1.8b"),
+                              w4a16_strategy="xla")
+    eng = ServingEngine(cfg, _params(cfg), max_batch=2, max_prompt_len=8,
+                        max_new_tokens=4, page_size=4)
+    w = eng.pages_slot
+    assert eng._live_bucket(w) is None
+    assert eng._live_bucket(w + 5) is None             # clamped, not wider
+    for hw in range(1, w + 1):
+        b = eng._live_bucket(hw)
+        if b is None:
+            assert 2 * hw > w or w % 2 == 1
+        else:
+            assert hw <= b < w and w % b == 0
+
+
 # ---------------------------------------------------------------------------
 # engine-level token parity: fused ≡ gather across archs × formats
 # ---------------------------------------------------------------------------
@@ -302,6 +552,71 @@ def test_fused_engine_parity_shared_prefix_cow():
     assert pages_f == pages_g               # identical allocator behavior
 
 
+@pytest.mark.parametrize("arch", ["h2o-danube-1.8b", "internvl2-1b"])
+def test_fused_chunked_prefill_parity(arch):
+    """Multi-chunk prefill (prompt split 5 tokens at a time) through the
+    fused multi-query kernel is token-identical to the gather path — SWA
+    ring-wrap and vision-prefix archs, quantized pool."""
+    cfg = dataclasses.replace(configs.get_reduced(arch),
+                              w4a16_strategy="xla")
+    P, G, n = 12, 4, 2
+    params = _params(cfg)
+
+    def run(path):
+        eng = ServingEngine(cfg, params, max_batch=n, max_prompt_len=P,
+                            max_new_tokens=G, page_size=4, prefill_chunk=5,
+                            kv_format="kv8_channel", attn_path=path)
+        assert eng.prefill_attn_path == path
+        return eng.run(_requests(cfg, n, P, G)).results
+
+    got, want = run("fused"), run("gather")
+    assert got == want and sorted(got) == list(range(n))
+
+
+def test_fused_verify_parity_ngram():
+    """Speculative verify (q_len = k+1) through the fused kernel: same
+    tokens AND same acceptance counts as the gather path on repetitive
+    prompts the ngram proposer actually drafts against."""
+    cfg = dataclasses.replace(configs.get_reduced("h2o-danube-1.8b"),
+                              w4a16_strategy="xla")
+    G, n = 8, 2
+    params = _params(cfg)
+    prompt = jnp.asarray([5, 6, 7, 5, 6, 7, 5, 6, 7, 5], jnp.int32)
+
+    def run(path):
+        eng = ServingEngine(cfg, params, max_batch=n,
+                            max_prompt_len=len(prompt), max_new_tokens=G,
+                            page_size=4, speculate="ngram", spec_k=3,
+                            attn_path=path)
+        assert eng.verify_attn_path == path
+        rep = eng.run([Request(rid=i, prompt=prompt, max_new_tokens=G)
+                       for i in range(n)])
+        return rep.results, rep.proposed_tokens, rep.accepted_tokens
+
+    (got, prop_f, acc_f), (want, prop_g, acc_g) = run("fused"), run("gather")
+    assert got == want and sorted(got) == list(range(n))
+    assert (prop_f, acc_f) == (prop_g, acc_g)
+
+
+def test_engine_multi_query_path_metrics():
+    """Per-regime plan resolution is exported: chunked engines surface the
+    prefill path gauge, speculative engines the verify path gauge."""
+    cfg = dataclasses.replace(configs.get_reduced("h2o-danube-1.8b"),
+                              w4a16_strategy="xla")
+    params = _params(cfg)
+    eng = ServingEngine(cfg, params, max_batch=2, max_prompt_len=8,
+                        max_new_tokens=3, page_size=4, prefill_chunk=4,
+                        speculate="ngram", spec_k=2)
+    want = "fused" if jax.default_backend() == "tpu" else "gather"
+    assert eng.prefill_attn_path == want
+    assert eng.verify_attn_path == want
+    eng.metrics = rmetrics.MetricsRegistry()
+    eng.run(_requests(cfg, 2, 8, 3))
+    text = eng.metrics.render()
+    assert "engine_prefill_attn_path" in text
+    assert "engine_verify_attn_path" in text
+
+
 def test_engine_attn_path_resolution_and_metrics():
     """auto resolves per backend (gather on CPU CI), the resolved path is
     exported as a /metrics gauge + per-path step counter, and fused on a
@@ -352,11 +667,11 @@ params = T.quantize_params(T.init_params(key, cfg), cfg, min_size=0)
 toks = jax.random.randint(key, (R, P), 0, cfg.vocab_size)
 
 
-def run_engine(mesh, attn_path):
+def run_engine(mesh, attn_path, **kw):
     planning.PLAN_CACHE.clear()
     eng = ServingEngine(cfg, params, mesh=mesh, max_batch=SLOTS,
                         max_prompt_len=P, max_new_tokens=G, page_size=4,
-                        attn_path=attn_path)
+                        attn_path=attn_path, **kw)
     reqs = [Request(rid=i, prompt=toks[i], max_new_tokens=G)
             for i in range(R)]
     return {str(k): v for k, v in sorted(eng.run(reqs).results.items())}
@@ -366,8 +681,12 @@ single_gather = run_engine(None, "gather")
 single_fused = run_engine(None, "fused")
 out["single/fused==gather"] = single_fused == single_gather
 mesh = make_local_mesh(data=2, model=4)
-sharded_fused = run_engine(mesh, "fused")
-out["tp4xdp2/fused==single"] = sharded_fused == single_gather
+# multi-query regimes on the mesh: 5-token prefill chunks + ngram verify
+# (q_len=k+1) all forced through the fused kernel — greedy speculative
+# decode is lossless, so tokens must still match plain single-device gather
+sharded_fused = run_engine(mesh, "fused", prefill_chunk=5,
+                           speculate="ngram", spec_k=2)
+out["tp4xdp2/mq fused==single"] = sharded_fused == single_gather
 print("RESULT " + json.dumps(out))
 """
 
